@@ -1,0 +1,107 @@
+"""Shared harness for the paper-reproduction benchmarks (Figs 2–5).
+
+Each benchmark builds a DDAL group of A2C/DQN CartPole agents, scans
+n_epochs and reports per-agent reward trajectories plus the paper's
+qualitative stability metrics:
+
+  * tail-mean   — mean reward over the last 20% of epochs
+  * tail-std    — its std (the paper's "fluctuation")
+  * frac@100    — fraction of tail epochs at the optimal reward 100
+
+The paper trains 50k epochs; the default budget here is scaled down
+(CPU wall-clock) — ``--full`` restores paper scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+from repro.rl import (CartPole, DQNConfig, init_a2c, init_dqn,
+                      make_a2c_callbacks, make_dqn_callbacks)
+
+
+@dataclasses.dataclass
+class RunResult:
+    rewards: np.ndarray          # (epochs, n_agents)
+    wall_s: float
+    spec: GroupSpec
+
+    def tail(self, frac: float = 0.2) -> np.ndarray:
+        n = max(1, int(self.rewards.shape[0] * frac))
+        return self.rewards[-n:]
+
+    def summary(self, label: str) -> str:
+        t = self.tail()
+        lines = [f"{label}: {self.rewards.shape[0]} epochs, "
+                 f"{self.rewards.shape[1]} agent(s), "
+                 f"{self.wall_s:.1f}s"]
+        for a in range(t.shape[1]):
+            lines.append(
+                f"  agent {a}: tail-mean={t[:, a].mean():6.2f} "
+                f"tail-std={t[:, a].std():6.2f} "
+                f"frac@100={(t[:, a] >= 100).mean():.2f}")
+        return "\n".join(lines)
+
+
+def run_a2c_group(n_agents: int, epochs: int, threshold: int,
+                  minibatch: int = 100, m_pieces: int = 32,
+                  lr: float = 3e-3, seed: int = 0,
+                  max_steps: int = 100) -> RunResult:
+    env = CartPole(max_steps=max_steps)
+    opt = optim.adamw(lr)
+    spec = GroupSpec(n_agents=n_agents, threshold=threshold,
+                     minibatch=minibatch, m_pieces=m_pieces)
+    gen, app, pof = make_a2c_callbacks(env, opt)
+    ddal = DDAL(spec, gen, app, pof)
+    key = jax.random.PRNGKey(seed)
+    astates = jax.vmap(lambda k: init_a2c(k, env, opt))(
+        jax.random.split(key, n_agents))
+    gs = ddal.init(astates)
+    run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
+    t0 = time.time()
+    gs, metrics = run(gs, jax.random.fold_in(key, 1))
+    rewards = np.asarray(metrics["return"])
+    return RunResult(rewards=rewards, wall_s=time.time() - t0,
+                     spec=spec)
+
+
+def run_dqn_group(n_agents: int, epochs: int, threshold: int,
+                  minibatch: int = 200, m_pieces: int = 32,
+                  lr: float = 1e-3, seed: int = 0,
+                  max_steps: int = 100) -> RunResult:
+    env = CartPole(max_steps=max_steps)
+    opt = optim.adamw(lr)
+    cfg = DQNConfig(capacity=10_000, eps_decay=max(500, epochs // 4))
+    spec = GroupSpec(n_agents=n_agents, threshold=threshold,
+                     minibatch=minibatch, m_pieces=m_pieces)
+    gen, app, pof = make_dqn_callbacks(env, opt, cfg)
+    ddal = DDAL(spec, gen, app, pof)
+    key = jax.random.PRNGKey(seed)
+    astates = jax.vmap(lambda k: init_dqn(k, env, opt, cfg))(
+        jax.random.split(key, n_agents))
+    gs = ddal.init(astates)
+    run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
+    t0 = time.time()
+    gs, metrics = run(gs, jax.random.fold_in(key, 1))
+    rewards = np.asarray(metrics["return"])
+    return RunResult(rewards=rewards, wall_s=time.time() - t0,
+                     spec=spec)
+
+
+def sparkline(xs: np.ndarray, width: int = 60) -> str:
+    """Terminal mini-plot of a reward trajectory."""
+    blocks = " ▁▂▃▄▅▆▇█"
+    if len(xs) > width:
+        chunk = len(xs) // width
+        xs = xs[:chunk * width].reshape(width, chunk).mean(axis=1)
+    lo, hi = 0.0, max(float(np.max(xs)), 1.0)
+    idx = ((xs - lo) / (hi - lo) * (len(blocks) - 1)).astype(int)
+    return "".join(blocks[i] for i in np.clip(idx, 0, len(blocks) - 1))

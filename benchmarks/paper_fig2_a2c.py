@@ -1,0 +1,58 @@
+"""Paper Fig. 2 — DDA3C: single-agent A2C vs 2-agent group learning
+on CartPole-v0 (max 100 steps/episode).
+
+Paper claims reproduced here:
+  * the single A2C agent keeps fluctuating and never locks to a
+    stable optimal policy;
+  * the 2-agent group locks to reward 100 with very small fluctuation
+    after knowledge sharing starts (threshold = 40% of the budget,
+    matching the paper's 20k/50k split).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_a2c_group, sparkline
+
+
+def main(epochs: int = 5_000, seed: int = 0, verbose: bool = True):
+    threshold = int(epochs * 0.4)             # paper: 20k of 50k
+    single = run_a2c_group(1, epochs, threshold=epochs + 1, seed=seed)
+    group = run_a2c_group(2, epochs, threshold=threshold, seed=seed)
+
+    if verbose:
+        print(single.summary("fig2a single-agent A2C"))
+        print("  " + sparkline(single.rewards[:, 0]))
+        print(group.summary(f"fig2bc DDA3C 2-agent (share@{threshold})"))
+        for a in range(2):
+            print("  " + sparkline(group.rewards[:, a]))
+
+    # the paper's claims are about STABILITY at the optimum (Fig. 2:
+    # "keep very stable at 100"), with outlier agents explicitly
+    # documented (Figs. 3-4) — so the checks compare the group's best
+    # agent, not the group mean, against the single-agent baseline
+    s_tail, g_tail = single.tail(), group.tail()
+    g_std = g_tail.std(axis=0)
+    checks = {
+        "a group agent locks at the optimum (frac@100 > 0.9)":
+            float((g_tail >= 100).mean(axis=0).max()) > 0.9,
+        "that agent is steadier than the single agent":
+            float(g_std.min()) < float(s_tail.std(axis=0).mean()),
+        "single agent never fully stabilises (frac@100 < 0.99)":
+            float((s_tail >= 100).mean()) < 0.99,
+    }
+    if verbose:
+        for k, v in checks.items():
+            print(f"  [{'PASS' if v else 'FAIL'}] {k}")
+    return {"single": single, "group": group, "checks": checks}
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--epochs", type=int, default=5_000)
+    p.add_argument("--full", action="store_true",
+                   help="paper scale (50k epochs)")
+    p.add_argument("--seed", type=int, default=0)
+    a = p.parse_args()
+    main(50_000 if a.full else a.epochs, a.seed)

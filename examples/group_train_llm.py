@@ -1,0 +1,77 @@
+"""End-to-end driver: DDAL group-agent training of a ~100M-parameter
+llama-family model for a few hundred steps on synthetic Markov data.
+
+Each agent is its own "environment" — a distinct order-1 Markov token
+stream (50% shared structure) — and the group exchanges gradient
+knowledge through the streaming DDAL trainer, exactly the code path
+the 512-chip dry-run lowers.
+
+    PYTHONPATH=src python examples/group_train_llm.py             # ~25M
+    PYTHONPATH=src python examples/group_train_llm.py --params-100m
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import save
+from repro.configs import get_arch_config
+from repro.configs.base import GroupSpec, ShapeConfig
+from repro.core import init_train_state, make_group_train_step
+from repro.data import StreamSpec, make_group_batch
+
+p = argparse.ArgumentParser()
+p.add_argument("--params-100m", action="store_true",
+               help="~100M params (slower on CPU)")
+p.add_argument("--steps", type=int, default=200)
+p.add_argument("--agents", type=int, default=2)
+p.add_argument("--ckpt", default=None)
+args = p.parse_args()
+
+base = get_arch_config("llama3.2-3b")
+if args.params_100m:
+    cfg = base.with_(n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+                     head_dim=64, d_ff=1792, vocab_size=32_000,
+                     param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+else:
+    cfg = base.with_(n_layers=6, d_model=384, n_heads=6, n_kv_heads=3,
+                     head_dim=64, d_ff=1024, vocab_size=16_000,
+                     param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+
+spec = GroupSpec(n_agents=args.agents, threshold=20, minibatch=10,
+                 knowledge_mode="streaming")
+shape = ShapeConfig("llm", seq_len=256, global_batch=4, kind="train")
+opt = optim.adamw(3e-4)
+stream = StreamSpec(seed=0, similarity=0.5)
+
+key = jax.random.PRNGKey(0)
+state = init_train_state(cfg, spec, opt, key)
+n_params = sum(int(x.size) for x in jax.tree.leaves(state.params)
+               ) // spec.n_agents
+print(f"{n_params:,} params/agent × {spec.n_agents} agents; "
+      f"warm-up {spec.threshold} steps, share every {spec.minibatch}")
+
+step_fn = jax.jit(make_group_train_step(cfg, spec, opt))
+t0 = time.time()
+losses = []
+for i in range(args.steps):
+    batch = make_group_batch(cfg, shape, stream, spec.n_agents, i)
+    state, m = step_fn(state, batch)
+    losses.append(np.asarray(m["loss"]))
+    if i % 10 == 0 or i == args.steps - 1:
+        ls = " ".join(f"{float(x):6.3f}" for x in m["loss"])
+        tag = " <shared>" if int(m["shared"]) else ""
+        print(f"step {i:4d} [{ls}]{tag}  "
+              f"({(i + 1) / (time.time() - t0):.2f} steps/s)")
+
+losses = np.stack(losses)
+print(f"\nloss agent-mean: first10={losses[:10].mean():.3f} "
+      f"last10={losses[-10:].mean():.3f} "
+      f"(uniform = {np.log(cfg.vocab_size):.3f})")
+if args.ckpt:
+    save(args.ckpt, state.params, step=args.steps)
+    print("checkpoint saved to", args.ckpt)

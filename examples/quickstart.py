@@ -1,0 +1,42 @@
+"""Quickstart — the paper in 60 seconds.
+
+Two A2C agents play CartPole-v0 in *separate* environments and share
+gradient knowledge through DDAL (paper Algorithm 1). Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+from repro.rl import CartPole, init_a2c, make_a2c_callbacks
+
+EPOCHS = 1_500
+THRESHOLD = 600          # epochs of independent warm-up learning
+
+env = CartPole()                               # each agent gets its own
+opt = optim.adamw(3e-3)
+spec = GroupSpec(n_agents=2, threshold=THRESHOLD, minibatch=100,
+                 m_pieces=32)
+
+gen_grads, apply_grads, params_of = make_a2c_callbacks(env, opt)
+ddal = DDAL(spec, gen_grads, apply_grads, params_of)
+
+key = jax.random.PRNGKey(0)
+agent_states = jax.vmap(lambda k: init_a2c(k, env, opt))(
+    jax.random.split(key, spec.n_agents))
+group = ddal.init(agent_states)
+
+group, metrics = jax.jit(lambda g, k: ddal.run(g, k, EPOCHS))(
+    group, jax.random.PRNGKey(1))
+rewards = np.asarray(metrics["return"])        # (EPOCHS, 2)
+
+for a in range(spec.n_agents):
+    before = rewards[:THRESHOLD, a].mean()
+    after = rewards[-300:, a].mean()
+    print(f"agent {a}: mean reward {before:6.1f} (warm-up) -> "
+          f"{after:6.1f} (after group sharing)")
+print("knowledge sharing starts at epoch", THRESHOLD,
+      "- a reward of 100 is the optimum")

@@ -1,0 +1,4 @@
+"""repro — Group-Agent Reinforcement Learning (GARL) + DDAL as a
+production multi-pod JAX framework. See DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""npz-backed pytree checkpointing."""
+from repro.checkpoint.npz import restore, save  # noqa: F401

@@ -1,0 +1,70 @@
+"""Checkpointing: flatten a pytree to keyed numpy arrays in one .npz.
+
+Path keys are serialised with ``jax.tree_util.keystr`` so arbitrary
+dict/list/NamedTuple nests round-trip; restore takes a *template*
+pytree (e.g. from ``jax.eval_shape``) and refills its leaves, casting
+back to the template dtype. Atomic via write-to-temp + rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn",
+                              "float8_e5m2"):
+            # np.savez cannot serialise ml_dtypes; f32 is lossless for
+            # bf16 and restore() casts back to the template dtype.
+            arr = arr.astype(np.float32)
+        out[jax.tree_util.keystr(path)] = arr
+    return out
+
+
+def save(path: str, tree: Any, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Refill ``template``'s leaves from ``path`` (dtypes follow the
+    template; shapes must match exactly)."""
+    with np.load(path) as data:
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+            template)
+        new_leaves = []
+        for kpath, leaf in paths_leaves:
+            key = jax.tree_util.keystr(kpath)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch at {key}: checkpoint "
+                    f"{arr.shape} vs template {leaf.shape}")
+            new_leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore_step(path: str) -> int | None:
+    with np.load(path) as data:
+        return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,205 @@
+"""Architecture / shape / group configuration dataclasses.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` module
+exporting ``get_config() -> ArchConfig`` with the exact assigned
+hyper-parameters (source citations in each file). ``ArchConfig.reduced``
+produces the smoke-test variant (≤2 layers, d_model ≤ 512, ≤4 experts)
+required to run a real forward/train step on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared: int = 0          # shared (always-on) experts, DeepSeek-style
+    capacity_factor: float = 1.25
+    router_zloss: float = 1e-3
+    aux_loss: float = 1e-2     # load-balance auxiliary loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    q_lora_rank: Optional[int] = None   # V2-Lite: queries not compressed
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block configuration."""
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    d_conv: int = 4
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: N super-blocks of (mamba_per_block Mamba2 layers +
+    one SHARED attention/MLP block) plus tail Mamba2 layers."""
+    n_super_blocks: int = 16
+    mamba_per_block: int = 4
+    tail_mamba: int = 1
+    lora_rank: int = 128       # per-call-site LoRA on the shared block
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_mode: str = "standard"         # standard | mrope | none
+    rope_theta: float = 1e6
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    sliding_window: Optional[int] = None
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    first_k_dense: int = 0              # deepseek: leading dense layers
+    dense_ff: int = 0                   # d_ff of those dense layers
+    # -- modality backbone stubs (per-spec carve-out) -----------------
+    cross_attention: bool = False       # musicgen: cross-attn to cond.
+    cond_len: int = 0                   # conditioning sequence length
+    n_codebooks: int = 1                # musicgen: 4 EnCodec codebooks
+    vision_prefix: int = 0              # qwen2-vl: # of patch embeddings
+    # -- numerics / execution -----------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    unroll_layers: bool = False         # dry-run: exact HLO cost/collectives
+    moe_dispatch: str = "auto"          # auto | dense | expert_parallel
+    mla_absorb: bool = True             # MLA decode weight absorption
+    attention_scores_dtype: str = "float32"   # float32 | bfloat16 (§Perf)
+    attention_impl: str = "xla"         # xla | pallas | pallas_interpret
+    ssd_impl: str = "xla"               # xla | pallas_interpret
+    max_position: int = 1 << 20
+    citation: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def q_proj_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_proj_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def dtype(self, which: str = "compute"):
+        return jnp.dtype(self.param_dtype if which == "param" else
+                         self.compute_dtype)
+
+    def with_(self, **kw) -> "ArchConfig":
+        return replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: ≤2 layers, d_model ≤ 512, ≤4 experts."""
+        d_model = min(self.d_model, 256)
+        head_dim = 32
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        # keep the GQA ratio interesting but legal
+        while n_heads % n_kv:
+            n_kv -= 1
+        kw = dict(
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            cond_len=min(self.cond_len, 8) if self.cross_attention else 0,
+            vision_prefix=min(self.vision_prefix, 8),
+            max_position=1 << 14,
+            param_dtype="float32",
+            compute_dtype="float32",
+            remat=False,
+        )
+        if self.moe is not None:
+            kw["moe"] = replace(self.moe, n_experts=4,
+                                top_k=min(self.moe.top_k, 2),
+                                expert_ff=128,
+                                n_shared=min(self.moe.n_shared, 1))
+        if self.mla is not None:
+            kw["mla"] = replace(self.mla, kv_lora_rank=64, qk_nope_dim=32,
+                                qk_rope_dim=16, v_dim=32)
+        if self.ssm is not None:
+            kw["ssm"] = replace(self.ssm, d_state=16, head_dim=16,
+                                chunk=32)
+        if self.hybrid is not None:
+            kw["hybrid"] = replace(self.hybrid, n_super_blocks=1,
+                                   mamba_per_block=1, tail_mamba=1,
+                                   lora_rank=8)
+            kw["n_layers"] = 3
+        if self.first_k_dense:
+            kw["dense_ff"] = 128
+        if self.sliding_window is not None:
+            kw["sliding_window"] = 16
+        if self.rope_mode == "mrope":
+            # sections must sum to head_dim/2 = 16
+            kw["mrope_sections"] = (4, 6, 6)
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------
+# Input shapes (assigned). ``kind`` selects which step function the
+# dry-run lowers: train_step / prefill_step / decode_step.
+# ---------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",  524_288,    1, "decode"),
+}
+
+# Dense (full-attention) archs fall back to a sliding-window variant for
+# long_500k (sub-quadratic requirement) — see DESIGN.md §5.
+LONG_CONTEXT_WINDOW = 8_192
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    """DDAL group-agent training configuration (paper §5)."""
+    n_agents: int = 1
+    threshold: int = 1_000       # warm-up epochs of independent learning
+    minibatch: int = 100         # share/update cadence (paper's name)
+    m_pieces: int = 8            # pieces retrieved from K_i ∪ K_-i
+    knowledge_mode: str = "buffer"   # buffer | streaming (LLM-scale)
+    knowledge_dtype: str = "float32" # streaming accumulators (bf16 halves
+                                     # the cross-pod exchange traffic)
+    topology: str = "full"       # full | ring
+    max_delay: int = 0           # async staleness simulation (epochs)
+    t_weighting: str = "epochs"  # T_j source
+    r_weighting: str = "uniform" # R_j source (paper §6 uses uniform)

@@ -1,0 +1,19 @@
+"""Granite-3.0-8B — dense GQA decoder [hf:ibm-granite/granite-3.0-2b-base]."""
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-3-8b",
+        family="dense",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=12800,
+        vocab_size=49155,
+        rope_theta=1e4,
+        tie_embeddings=True,
+        citation="hf:ibm-granite/granite-3.0-2b-base",
+    )

@@ -1,0 +1,19 @@
+"""Llama-3.2-3B — small llama3 dense GQA [hf:meta-llama/Llama-3.2-1B]."""
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="llama3.2-3b",
+        family="dense",
+        n_layers=28,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=128256,
+        rope_theta=5e5,
+        tie_embeddings=True,
+        citation="hf:meta-llama/Llama-3.2-1B",
+    )

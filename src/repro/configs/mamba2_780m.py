@@ -1,0 +1,26 @@
+"""Mamba2-780M — attention-free SSM with SSD (state-space duality)
+[arXiv:2405.21060]. d_inner = expand * d_model = 3072, head_dim 64 →
+48 SSD heads, d_state=128, chunk 256, conv4.
+
+Arch-applicability note (DESIGN.md): DDAL consumes gradient pytrees and
+is agnostic to the sequence-mixing operator, so the paper's technique
+applies unchanged; there is simply no attention to shard."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-780m",
+        family="ssm",
+        n_layers=48,
+        d_model=1536,
+        n_heads=0,               # attention-free
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,                  # no MLP: Mamba2 blocks only
+        vocab_size=50280,
+        rope_mode="none",
+        ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1,
+                      chunk=256, d_conv=4),
+        citation="arXiv:2405.21060",
+    )

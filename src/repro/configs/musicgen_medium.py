@@ -1,0 +1,26 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284]. Backbone only: the EnCodec audio codec and the T5
+text encoder are stubbed (``input_specs`` supplies conditioning
+embeddings), per the spec's audio/VLM carve-out. 4 codebooks with
+summed embeddings and 4 parallel LM heads; cross-attention to the text
+conditioning sequence in every layer."""
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="musicgen-medium",
+        family="audio",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,           # MHA (kv = heads)
+        head_dim=64,
+        d_ff=6144,
+        vocab_size=2048,
+        rope_mode="none",        # musicgen uses sinusoidal embeddings
+        cross_attention=True,
+        cond_len=64,             # stubbed T5 conditioning length
+        n_codebooks=4,
+        citation="arXiv:2306.05284",
+    )

@@ -1,0 +1,27 @@
+"""Qwen2-VL-72B — VLM language backbone with M-RoPE
+[arXiv:2409.12191]. Backbone only: the ViT vision encoder + projector
+are stubbed per the spec carve-out — ``input_specs`` provides
+pre-projected patch embeddings (vision_prefix positions) that are
+concatenated ahead of the text tokens; M-RoPE consumes (t, h, w)
+position triples with sections (16, 24, 24) of the half head-dim."""
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_mode="mrope",
+        mrope_sections=(16, 24, 24),
+        rope_theta=1e6,
+        vision_prefix=256,       # stubbed patch-embedding prefix length
+        citation="arXiv:2409.12191",
+    )

@@ -1,0 +1,20 @@
+"""Qwen3-30B-A3B — MoE, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+head_dim=128 is explicit in the model card (q-proj 2048 → 4096)."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=768,                # routed-expert FF width
+        vocab_size=151936,
+        rope_theta=1e6,
+        moe=MoEConfig(n_experts=128, top_k=8, expert_ff=768, n_shared=0),
+        citation="hf:Qwen/Qwen3-30B-A3B",
+    )

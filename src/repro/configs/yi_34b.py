@@ -1,0 +1,18 @@
+"""Yi-34B — dense llama-arch GQA decoder [arXiv:2403.04652]."""
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="yi-34b",
+        family="dense",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=20480,
+        vocab_size=64000,
+        rope_theta=5e6,
+        citation="arXiv:2403.04652",
+    )

@@ -1,0 +1,27 @@
+"""Zamba2-7B — hybrid Mamba2 + shared attention blocks
+[arXiv:2411.15242]. 81 layers realised as 16 super-blocks of
+(4 Mamba2 + 1 SHARED attention/MLP block) + 1 closing Mamba2 layer.
+The attention block's weights are shared across all 16 call-sites with
+per-call-site LoRA adapters (rank 128), following Zamba2's shared-block
+design. ssm_state=64 per the assignment."""
+from repro.configs.base import ArchConfig, HybridConfig, SSMConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        n_layers=81,
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,           # MHA in the shared block
+        head_dim=112,            # 3584 / 32 (not 128-aligned; see roofline)
+        d_ff=14336,
+        vocab_size=32000,
+        rope_theta=1e4,
+        ssm=SSMConfig(d_state=64, expand=2, head_dim=64, n_groups=1,
+                      chunk=256, d_conv=4),
+        hybrid=HybridConfig(n_super_blocks=16, mamba_per_block=4,
+                            tail_mamba=1, lora_rank=128),
+        citation="arXiv:2411.15242",
+    )

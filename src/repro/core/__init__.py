@@ -1,0 +1,24 @@
+"""The paper's primary contribution: GARL formulation + DDAL learning
+framework (knowledge stores, eq. 4 weighting, async delay lines, and
+the pod-scale sharded variant)."""
+from repro.core.ddal import DDAL, GroupState  # noqa: F401
+from repro.core.group_mdp import AgentEnv, GroupMDP  # noqa: F401
+from repro.core.knowledge import (  # noqa: F401
+    InFlight,
+    KnowledgeStore,
+    make_inflight,
+    make_store,
+    weighted_average,
+)
+from repro.core.sharded_ddal import (  # noqa: F401
+    Knowledge,
+    TrainState,
+    init_train_state,
+    make_group_train_step,
+    train_state_specs,
+)
+from repro.core.weighting import (  # noqa: F401
+    eq4_weights,
+    relevance_matrix,
+    training_experience,
+)

@@ -1,0 +1,137 @@
+"""DDAL — Decentralised Distributed Asynchronous Learning (paper §5,
+Algorithm 1), as a vmapped group loop over n agents.
+
+The agent is abstracted behind two pure callbacks so DDAL "is not
+restricted by agent type" (paper §5) — DQN, A2C and the LLM trainers
+all plug in the same way:
+
+    gen_grads(agent_state, key)   -> (grads, metrics, agent_state')
+        Algorithm 1 lines 2–4: generate k experiences, compute the
+        average loss, compute gradients.
+    apply_grads(agent_state, g)   -> agent_state'
+        one model update with gradients (or ḡ).
+
+Per epoch (Algorithm 1):
+    epoch < threshold : independent learning — update with own grads.
+    epoch ≥ threshold : broadcast the piece (with T, R metadata)
+        through the delay lines into every store; every ``minibatch``
+        epochs retrieve m pieces from K_i ∪ K_-i and update with the
+        eq. 4 weighted average.
+
+Asynchrony is simulated by the per-edge delay matrix (DESIGN.md §3);
+delay 0 reproduces the paper's same-epoch queue delivery.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_map
+from repro.configs.base import GroupSpec
+from repro.core import knowledge as K
+from repro.core.weighting import (eq4_weights, relevance_matrix,
+                                  training_experience)
+
+
+class GroupState(NamedTuple):
+    agent_states: Any          # leaves with leading (n,) agent axis
+    stores: K.KnowledgeStore   # leading (n,)
+    flight: K.InFlight
+    epoch: jnp.ndarray         # () int32
+
+
+def _tree_select(pred, a, b):
+    """Leafwise where(pred, a, b); pred may be (n,) for vmapped trees."""
+    def sel(x, y):
+        p = jnp.reshape(pred, pred.shape + (1,) * (x.ndim - pred.ndim))
+        return jnp.where(p, x, y)
+    return tree_map(sel, a, b)
+
+
+class DDAL:
+    """Group-agent learning loop. Construct once, then either call
+    ``epoch_step`` inside your own loop or ``run`` to scan N epochs."""
+
+    def __init__(self, spec: GroupSpec, gen_grads: Callable,
+                 apply_grads: Callable, params_of: Callable,
+                 relevance: Optional[jnp.ndarray] = None,
+                 delay: Optional[jnp.ndarray] = None,
+                 use_wavg_kernel: bool = False):
+        self.spec = spec
+        self.gen_grads = gen_grads
+        self.apply_grads = apply_grads
+        self.params_of = params_of       # agent_state -> params pytree
+        n = spec.n_agents
+        self.relevance = (relevance if relevance is not None else
+                          relevance_matrix(n, "ring" if
+                                           spec.topology == "ring"
+                                           else "uniform"))
+        if delay is None:
+            delay = jnp.zeros((n, n), jnp.int32)
+        self.delay = delay
+        self.max_delay = max(int(jnp.max(delay)), spec.max_delay)
+        self.use_wavg_kernel = use_wavg_kernel
+
+    # ------------------------------------------------------------------
+    def init(self, agent_states) -> GroupState:
+        """agent_states: pytree with leading (n,) axis."""
+        n = self.spec.n_agents
+        params0 = self.params_of(tree_map(lambda x: x[0], agent_states))
+        stores = jax.vmap(lambda _: K.make_store(params0,
+                                                 self.spec.m_pieces))(
+            jnp.arange(n))
+        flight = K.make_inflight(params0, n, self.max_delay)
+        return GroupState(agent_states=agent_states, stores=stores,
+                          flight=flight,
+                          epoch=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------------
+    def epoch_step(self, gs: GroupState, keys) -> Tuple[GroupState, Any]:
+        """One epoch for the whole group. keys: (n,) PRNG keys."""
+        spec = self.spec
+        n = spec.n_agents
+        epoch = gs.epoch
+        grads, metrics, astates = jax.vmap(self.gen_grads)(
+            gs.agent_states, keys)
+
+        warmup = epoch < spec.threshold
+        sharing = jnp.logical_not(warmup)
+
+        # --- lines 5–6: independent learning during warm-up -----------
+        updated_local = jax.vmap(self.apply_grads)(astates, grads)
+        astates = _tree_select(
+            jnp.broadcast_to(warmup, (n,)), updated_local, astates)
+
+        # --- lines 8–10: append + asynchronous broadcast ---------------
+        T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
+                             (n,))
+        flight = K.send(gs.flight, grads, T, self.relevance, self.delay,
+                        epoch, sharing)
+        flight, stores = K.deliver(flight, gs.stores, epoch)
+
+        # --- lines 11–14: eq. 4 update every ``minibatch`` epochs ------
+        is_update = sharing & (epoch % spec.minibatch == 0)
+        gbar, wsum = jax.vmap(
+            lambda st: K.weighted_average(st, self.use_wavg_kernel))(
+            stores)
+        updated_group = jax.vmap(self.apply_grads)(astates, gbar)
+        # only update agents whose store has at least one valid piece
+        do = jnp.broadcast_to(is_update, (n,)) & (wsum > 0)
+        astates = _tree_select(do, updated_group, astates)
+
+        new_gs = GroupState(agent_states=astates, stores=stores,
+                            flight=flight, epoch=epoch + 1)
+        return new_gs, metrics
+
+    # ------------------------------------------------------------------
+    def run(self, gs: GroupState, key, n_epochs: int
+            ) -> Tuple[GroupState, Any]:
+        """Scan ``n_epochs`` epochs; returns stacked per-epoch metrics."""
+        def body(carry, k):
+            keys = jax.random.split(k, self.spec.n_agents)
+            return self.epoch_step(carry, keys)
+
+        keys = jax.random.split(key, n_epochs)
+        return jax.lax.scan(body, gs, keys)

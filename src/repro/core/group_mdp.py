@@ -1,0 +1,67 @@
+"""Group MDP — the paper's formalisation of GARL (paper §4, eq. 3).
+
+    ⟨S_1..n, A_1..n, P_1..n, R_1..n, γ_1..n, K_1..n, K_-1..-n⟩
+
+Each agent i has its own stationary environment (S_i, A_i, P_i, R_i,
+γ_i), a local-knowledge set K_i and a received-knowledge set
+K_-i = {K_{j,i}} — the only coupling between agents is knowledge
+communication. This module is the *spec* level: it declares the group,
+validates its structure and binds per-agent environments/agents; the
+learning dynamics live in ``repro.core.ddal``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.configs.base import GroupSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentEnv:
+    """One agent's own MDP: environment + discount. ``env`` is any
+    object exposing reset(key) -> state and step(state, action) ->
+    (state, obs, reward, done) as pure jax functions."""
+    env: Any
+    gamma: float = 0.99
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupMDP:
+    """A group of n agents, each with its own environment. The special
+    case of §6 of the paper (all agents share the same game) is
+    ``homogeneous()``; the general case allows distinct envs, reward
+    functions and discounts — their knowledge is coupled only through
+    the relevance matrix R (R[j, i] = relevance of j's knowledge to i).
+    """
+    agents: Sequence[AgentEnv]
+    spec: GroupSpec
+    relevance: Optional[jnp.ndarray] = None   # (n, n), diag included
+
+    def __post_init__(self):
+        n = len(self.agents)
+        if n != self.spec.n_agents:
+            raise ValueError(
+                f"GroupSpec.n_agents={self.spec.n_agents} but "
+                f"{n} agent environments were given")
+        if self.relevance is not None:
+            if self.relevance.shape != (n, n):
+                raise ValueError(f"relevance must be ({n},{n})")
+
+    @property
+    def n(self) -> int:
+        return len(self.agents)
+
+    @classmethod
+    def homogeneous(cls, env, n: int, spec: Optional[GroupSpec] = None,
+                    gamma: float = 0.99) -> "GroupMDP":
+        """Paper §6: every agent plays the same game; relevance is
+        uniform so R_j is ignored (paper: 'we ignore the R_j
+        parameters')."""
+        spec = spec or GroupSpec(n_agents=n)
+        if spec.n_agents != n:
+            spec = dataclasses.replace(spec, n_agents=n)
+        return cls(agents=tuple(AgentEnv(env, gamma) for _ in range(n)),
+                   spec=spec)

@@ -1,0 +1,171 @@
+"""Knowledge stores (K_i ∪ K_-i) for DDAL — functional jnp structures.
+
+A ``KnowledgeStore`` is a ring buffer of the last ``m`` gradient pieces
+an agent holds, each with its (T, R) weighting metadata (paper §5:
+every piece travels with its training-experience and relevance
+weights). The paper's multiprocessing queues become delay lines
+(``InFlight``): a piece sent by agent j at epoch t is delivered into
+agent i's store at epoch t + delay[j, i] — deterministic asynchrony
+(DESIGN.md §3).
+
+All structures carry a leading agent axis when used by the vmapped
+group loop in ``repro.core.ddal``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_map, tree_weighted_sum, tree_zeros_like
+from repro.core.weighting import eq4_weights
+
+
+class KnowledgeStore(NamedTuple):
+    grads: Any           # pytree, leaves (m, *param_shape)
+    T: jnp.ndarray       # (m,) training-experience weights
+    R: jnp.ndarray       # (m,) relevance weights
+    valid: jnp.ndarray   # (m,) bool
+    ptr: jnp.ndarray     # () int32 — next write slot
+
+
+def make_store(params_like, m: int) -> KnowledgeStore:
+    grads = tree_map(
+        lambda x: jnp.zeros((m,) + x.shape, jnp.float32), params_like)
+    return KnowledgeStore(
+        grads=grads,
+        T=jnp.zeros((m,), jnp.float32),
+        R=jnp.zeros((m,), jnp.float32),
+        valid=jnp.zeros((m,), bool),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+def append(store: KnowledgeStore, piece, T, R,
+           enabled=True) -> KnowledgeStore:
+    """Append one piece (overwrites the oldest when full). ``enabled``
+    may be a traced bool — when False the store is returned unchanged
+    (used to mask delivery before the sharing threshold)."""
+    slot = store.ptr % store.T.shape[0]
+    en = jnp.asarray(enabled)
+
+    def write(buf, x):
+        new = buf.at[slot].set(x.astype(buf.dtype))
+        return jnp.where(en, new, buf) if new.ndim == 0 else \
+            jnp.where(jnp.reshape(en, (1,) * new.ndim), new, buf)
+
+    grads = tree_map(lambda b, x: write(b, x), store.grads, piece)
+    return KnowledgeStore(
+        grads=grads,
+        T=write(store.T, jnp.broadcast_to(T, ())),
+        R=write(store.R, jnp.broadcast_to(R, ())),
+        valid=write(store.valid, jnp.asarray(True)),
+        ptr=store.ptr + en.astype(jnp.int32),
+    )
+
+
+def append_many(store: KnowledgeStore, pieces, T, R,
+                deliver) -> KnowledgeStore:
+    """Append up to n pieces at once (one scan step per piece so ring
+    semantics — oldest first overwritten — are preserved).
+
+    pieces: pytree with leading axis n; T, R, deliver: (n,).
+    """
+    n = T.shape[0]
+
+    def body(st, idx):
+        piece = tree_map(lambda x: x[idx], pieces)
+        return append(st, piece, T[idx], R[idx], deliver[idx]), None
+
+    store, _ = jax.lax.scan(body, store, jnp.arange(n))
+    return store
+
+
+def weighted_average(store: KnowledgeStore, use_kernel: bool = False):
+    """eq. 4 over the store's valid pieces → (ḡ, total_weight)."""
+    w = eq4_weights(store.T, store.R, store.valid)
+    if use_kernel:
+        from repro.kernels.ddal_wavg import ops as wavg_ops
+        g = wavg_ops.tree_wavg(store.grads, w, interpret=True)
+    else:
+        g = tree_weighted_sum(store.grads, w)
+    return g, jnp.sum(w)
+
+
+class InFlight(NamedTuple):
+    """Delay-line simulating asynchronous delivery. Slot layout:
+    (dst, delay_slot, src, *piece); a piece from src→dst sent at epoch
+    t sits in slot (t + delay[src, dst]) % (D+1) until epoch
+    t + delay[src, dst] pops it."""
+    grads: Any            # leaves (n_dst, D+1, n_src, *param_shape)
+    T: jnp.ndarray        # (n_dst, D+1, n_src)
+    R: jnp.ndarray
+    valid: jnp.ndarray    # bool
+
+
+def make_inflight(params_like, n: int, max_delay: int) -> InFlight:
+    D1 = max_delay + 1
+    grads = tree_map(
+        lambda x: jnp.zeros((n, D1, n) + x.shape, jnp.float32),
+        params_like)
+    z = jnp.zeros((n, D1, n), jnp.float32)
+    return InFlight(grads=grads, T=z, R=z, valid=z.astype(bool))
+
+
+def send(flight: InFlight, pieces, T, R, delay, epoch,
+         enabled) -> InFlight:
+    """Every agent broadcasts its piece to every destination.
+
+    pieces: pytree leaves (n_src, ...); T: (n_src,); R: (n_src, n_dst)
+    relevance of src's knowledge to dst; delay: (n_src, n_dst) int;
+    enabled: scalar bool (sharing started).
+    """
+    n, D1 = flight.T.shape[0], flight.T.shape[1]
+    slot = (epoch + delay) % D1                     # (n_src, n_dst)
+    en = jnp.asarray(enabled)
+    src = jnp.arange(n)[:, None] * jnp.ones((1, n), jnp.int32)
+    dst = jnp.arange(n)[None, :] * jnp.ones((n, 1), jnp.int32)
+
+    def put(buf, xs):
+        # buf: (n_dst, D1, n_src, ...); xs: (n_src, ...)
+        upd = jnp.broadcast_to(
+            xs[:, None, ...], (n, n) + xs.shape[1:])  # (src, dst, ...)
+        new = buf.at[dst.T, slot.T, src.T].set(
+            jnp.swapaxes(upd, 0, 1).astype(buf.dtype))
+        return jnp.where(jnp.reshape(en, (1,) * new.ndim), new, buf)
+
+    grads = tree_map(lambda b, x: put(b, x), flight.grads, pieces)
+    Tb = jnp.broadcast_to(T[:, None], (n, n))
+    new_T = flight.T.at[dst.T, slot.T, src.T].set(Tb.T)
+    new_R = flight.R.at[dst.T, slot.T, src.T].set(R.T)
+    new_valid = flight.valid.at[dst.T, slot.T, src.T].set(True)
+    pick = lambda new, old: jnp.where(  # noqa: E731
+        jnp.reshape(en, (1,) * new.ndim), new, old)
+    return InFlight(grads=grads, T=pick(new_T, flight.T),
+                    R=pick(new_R, flight.R),
+                    valid=pick(new_valid, flight.valid))
+
+
+def deliver(flight: InFlight, stores: KnowledgeStore, epoch
+            ) -> Tuple[InFlight, KnowledgeStore]:
+    """Pop epoch's arrival slot for every destination and append the
+    valid pieces into the (vmapped) knowledge stores."""
+    n, D1 = flight.T.shape[0], flight.T.shape[1]
+    slot = epoch % D1
+
+    def pop(dst_store, dst_idx):
+        pieces = tree_map(lambda b: b[dst_idx, slot], flight.grads)
+        return append_many(
+            dst_store, pieces,
+            flight.T[dst_idx, slot], flight.R[dst_idx, slot],
+            flight.valid[dst_idx, slot])
+
+    new_stores = jax.vmap(pop)(stores, jnp.arange(n))
+    cleared = InFlight(
+        grads=flight.grads,  # stale slots overwritten by next send
+        T=flight.T,
+        R=flight.R,
+        valid=flight.valid.at[:, slot, :].set(False),
+    )
+    return cleared, new_stores

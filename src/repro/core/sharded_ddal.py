@@ -1,0 +1,179 @@
+"""DDAL at pod scale — group-agent training of the model zoo.
+
+Mapping (DESIGN.md §3): one GARL agent per **pod**. Parameters,
+optimiser state and knowledge accumulators carry a leading
+``(n_agents,)`` axis sharded ``P("pod")``; each agent consumes its own
+data stream (its own "environment"). Cross-agent knowledge exchange is
+expressed as reductions over the agent axis, which GSPMD lowers to
+collectives over the pod interconnect — **only at share steps**, which
+is DDAL's communication saving over lockstep data parallelism.
+
+Knowledge is held in *streaming* form: per-agent accumulators
+    tg = Σ_j T_j·g_j,  tsum = Σ_j T_j,  rg = Σ_j g_j,  rsum = Σ_j 1
+over the pieces generated since the last share step. The eq. 4 average
+over the union of all agents' windows is then
+
+    ḡ(dst) = ½ ( Σ_src tg_src / Σ_src tsum_src
+               + Σ_src R[src,dst]·rg_src / Σ_src R[src,dst]·rsum_src )
+
+— mathematically identical to materialising every piece (the weighted
+sum is linear), but O(1) memory instead of m copies of a 34B-parameter
+gradient. This matches the paper's own experiment ("gradients generated
+by and received during its previous 1000 epochs"). The ring-buffer
+(piece-faithful) form lives in ``repro.core.ddal`` for agent-scale use.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_map, tree_zeros_like
+from repro.configs.base import ArchConfig, GroupSpec
+from repro.core.weighting import relevance_matrix, training_experience
+from repro.models import get_model
+from repro.optim import Optimizer
+
+
+class Knowledge(NamedTuple):
+    tg: Any               # pytree, leaves (A, *param) fp32
+    tsum: jnp.ndarray     # (A,)
+    rg: Any
+    rsum: jnp.ndarray     # (A,)
+
+
+class TrainState(NamedTuple):
+    params: Any           # leaves (A, *param)
+    opt_state: Any
+    know: Knowledge
+    step: jnp.ndarray     # () int32
+
+
+def init_knowledge(params, dtype=jnp.float32) -> Knowledge:
+    A = jax.tree.leaves(params)[0].shape[0]
+    acc = tree_map(lambda x: jnp.zeros(x.shape, jnp.dtype(dtype)),
+                   params)
+    return Knowledge(tg=acc, tsum=jnp.zeros((A,), jnp.float32),
+                     rg=tree_zeros_like(acc),
+                     rsum=jnp.zeros((A,), jnp.float32))
+
+
+def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
+                     key) -> TrainState:
+    """Real initialisation (CPU tests / actual training)."""
+    model = get_model(cfg)
+    keys = jax.random.split(key, spec.n_agents)
+    params = jax.vmap(lambda k: model.init(cfg, k))(keys)
+    opt_state = jax.vmap(opt.init)(params)
+    return TrainState(params=params, opt_state=opt_state,
+                      know=init_knowledge(params,
+                                          jnp.dtype(spec.knowledge_dtype)),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer
+                      ) -> TrainState:
+    """ShapeDtypeStruct version for the dry-run (no allocation)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, spec, opt, k), key)
+
+
+def _combine(know: Knowledge, R: jnp.ndarray, uniform: bool):
+    """eq. 4 over the union of all agents' windows → per-dst ḡ with a
+    leading (A,) axis (identical rows when R is uniform)."""
+    A = know.tsum.shape[0]
+    eps = 1e-12
+
+    if uniform:
+        # Σ over the (pod-sharded) agent axis → all-reduce over pods.
+        tsum = jnp.maximum(jnp.sum(know.tsum), eps)
+        rsum = jnp.maximum(jnp.sum(know.rsum), eps)
+
+        def avg(tg_leaf, rg_leaf):
+            t = jnp.sum(tg_leaf, axis=0) / tsum
+            r = jnp.sum(rg_leaf, axis=0) / rsum
+            g = 0.5 * (t + r)
+            return jnp.broadcast_to(g[None], tg_leaf.shape)
+
+        return tree_map(avg, know.tg, know.rg)
+
+    # per-destination relevance: weighted gather over the agent axis
+    r_t = jnp.maximum(jnp.sum(know.tsum), eps)             # T̂ is global
+    rden = jnp.maximum(know.rsum @ R, eps)                 # (A_dst,)
+
+    def avg(tg_leaf, rg_leaf):
+        t = jnp.sum(tg_leaf, axis=0) / r_t                 # (*param,)
+        r = jnp.tensordot(R, rg_leaf, axes=(0, 0))         # (A_dst,*param)
+        r = r / jnp.reshape(rden, (A,) + (1,) * (r.ndim - 1))
+        return 0.5 * (t[None] + r)
+
+    return tree_map(avg, know.tg, know.rg)
+
+
+def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
+                          opt: Optimizer,
+                          relevance: Optional[jnp.ndarray] = None,
+                          loss_fn: Optional[Callable] = None):
+    """Build the jittable DDAL train step.
+
+    Returns step(state, batch) -> (state', metrics); ``batch`` leaves
+    carry a leading (n_agents,) axis (each agent's own data stream).
+    """
+    model = get_model(cfg)
+    if loss_fn is None:
+        def loss_fn(params, batch):        # noqa: F811
+            return model.loss(cfg, params, batch)
+    A = spec.n_agents
+    uniform = spec.r_weighting == "uniform" or relevance is None
+    R = (relevance if relevance is not None
+         else relevance_matrix(A, "ring" if spec.topology == "ring"
+                               else "uniform"))
+
+    vopt = jax.vmap(opt.update, in_axes=(0, 0, 0, None))
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Any]:
+        step = state.step
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(
+            state.params, batch)
+        know = state.know
+
+        warmup = step < spec.threshold
+        is_share = jnp.logical_not(warmup) & (step % spec.minibatch == 0)
+
+        def warmup_branch(_):
+            p2, o2 = vopt(grads, state.opt_state, state.params, step)
+            return p2, o2, know
+
+        def sharing_branch(_):
+            # accumulate this epoch's piece into the local window
+            kdt = jnp.dtype(spec.knowledge_dtype)
+            T_t = training_experience(step, spec.t_weighting)
+            tg = tree_map(lambda a, g: a + (T_t * g.astype(jnp.float32)
+                                            ).astype(kdt),
+                          know.tg, grads)
+            rg = tree_map(lambda a, g: a + g.astype(kdt),
+                          know.rg, grads)
+            k2 = Knowledge(tg=tg, tsum=know.tsum + T_t,
+                           rg=rg, rsum=know.rsum + 1.0)
+
+            def do_share(_):
+                gbar = _combine(k2, R, uniform)
+                p2, o2 = vopt(gbar, state.opt_state, state.params, step)
+                return p2, o2, init_knowledge(state.params, kdt)
+
+            def hold(_):
+                return state.params, state.opt_state, k2
+
+            return jax.lax.cond(is_share, do_share, hold, None)
+
+        params, opt_state, know = jax.lax.cond(
+            warmup, warmup_branch, sharing_branch, None)
+        metrics = {"loss": losses, "step": step,
+                   "shared": is_share.astype(jnp.int32)}
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               know=know, step=step + 1)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,69 @@
+"""DDAL weighting — paper eq. 4.
+
+    ḡ = ½ ( Σ_j T_j/ΣT · g_j  +  Σ_j R_j/ΣR · g_j )
+
+so each piece's effective weight is w_j = ½(T_j/ΣT + R_j/ΣR): a convex
+combination of the two normalised weightings. T_j quantifies the
+*training experience* of the source when the piece was generated
+(paper: number of training epochs); R_j its *relevance* to the
+destination (paper §6 sets it uniform for homogeneous groups).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def eq4_weights(T, R, valid=None, eps: float = 1e-12):
+    """Effective per-piece weights w_j = ½(T̂_j + R̂_j).
+
+    T, R: (m,) float arrays; valid: optional (m,) bool mask for ring
+    buffers that are not yet full. Invalid pieces get weight 0 and are
+    excluded from both normalisations. Returns (m,) weights that sum to
+    1 over valid pieces (to 0 if none are valid).
+    """
+    T = jnp.asarray(T, jnp.float32)
+    R = jnp.asarray(R, jnp.float32)
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        T = T * v
+        R = R * v
+    t_hat = T / jnp.maximum(jnp.sum(T), eps)
+    r_hat = R / jnp.maximum(jnp.sum(R), eps)
+    return 0.5 * (t_hat + r_hat)
+
+
+def training_experience(epoch, mode: str = "epochs"):
+    """T_j for a piece generated at ``epoch`` (paper: proportional to
+    the number of training epochs so far)."""
+    e = jnp.asarray(epoch, jnp.float32)
+    if mode == "epochs":
+        return jnp.maximum(e, 1.0)
+    if mode == "sqrt":
+        return jnp.sqrt(jnp.maximum(e, 1.0))
+    if mode == "uniform":
+        return jnp.ones_like(e)
+    raise ValueError(f"unknown T mode {mode!r}")
+
+
+def relevance_matrix(n: int, mode: str = "uniform",
+                     adjacency=None) -> jnp.ndarray:
+    """R[j, i] = relevance of agent j's knowledge to agent i. The group
+    topology is expressed as a mask on R (DESIGN.md §3): a zero entry
+    means j's knowledge never reaches i."""
+    R = jnp.ones((n, n), jnp.float32)
+    if mode == "uniform":
+        pass
+    elif mode == "ring":
+        idx = jnp.arange(n)
+        adj = (jnp.abs(idx[:, None] - idx[None, :]) % (n - 1 if n > 1 else 1)
+               <= 1) if n > 2 else jnp.ones((n, n), bool)
+        ring = (jnp.minimum((idx[:, None] - idx[None, :]) % n,
+                            (idx[None, :] - idx[:, None]) % n) <= 1)
+        R = R * ring.astype(jnp.float32)
+    elif mode == "custom":
+        if adjacency is None:
+            raise ValueError("custom relevance needs an adjacency matrix")
+        R = jnp.asarray(adjacency, jnp.float32)
+    else:
+        raise ValueError(f"unknown relevance mode {mode!r}")
+    return R

@@ -1,0 +1,8 @@
+"""Data pipeline: deterministic per-agent synthetic streams (each
+agent = its own environment) + host-sharded placement."""
+from repro.data.sharded import device_put_sharded_batch  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    StreamSpec,
+    make_agent_batch,
+    make_group_batch,
+)

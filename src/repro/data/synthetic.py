@@ -1,0 +1,138 @@
+"""Deterministic per-agent synthetic token streams.
+
+In GARL every agent has its *own* environment; at LLM scale an agent's
+environment is its data stream (DESIGN.md §3). Streams are pure
+functions of (seed, agent_id, step) so they are reproducible, jit-safe
+and shardable from hosts without coordination.
+
+Two generators:
+
+* ``lm_stream`` — structured language-model data: tokens follow a
+  per-agent randomly-drawn order-1 Markov chain over the vocab, so
+  next-token prediction is genuinely learnable (loss drops well below
+  log V) and *different agents see different transition matrices* —
+  the heterogeneous-environments setting of the paper. A shared
+  ``similarity`` knob interpolates every agent's chain toward a common
+  one (the paper's "neighbourhoods of the same city").
+* ``uniform_stream`` — i.i.d. uniform tokens (for pure-throughput
+  benches where learnability is irrelevant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    seed: int = 0
+    kind: str = "markov"         # markov | uniform
+    n_states: int = 64           # markov chain order-1 state count
+    similarity: float = 0.5      # 0 = fully per-agent, 1 = identical
+    branch: int = 4              # out-degree of each markov state
+
+
+def _agent_key(spec: StreamSpec, agent_id, step):
+    key = jax.random.PRNGKey(spec.seed)
+    key = jax.random.fold_in(key, agent_id)
+    return jax.random.fold_in(key, step)
+
+
+def _markov_table(spec: StreamSpec, vocab: int, agent_id) -> jnp.ndarray:
+    """(n_states, branch) successor table, blended between a shared
+    table and a per-agent one by ``similarity``."""
+    n = min(spec.n_states, vocab)
+    shared = jax.random.randint(
+        jax.random.PRNGKey(spec.seed ^ 0x5EED), (n, spec.branch), 0, n)
+    local = jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed), agent_id),
+        (n, spec.branch), 0, n)
+    pick_shared = jax.random.bernoulli(
+        jax.random.PRNGKey(spec.seed ^ 0xB1E0D), spec.similarity,
+        (n, spec.branch))
+    return jnp.where(pick_shared, shared, local)
+
+
+def _markov_tokens(spec: StreamSpec, vocab: int, agent_id, step,
+                   batch: int, seq: int) -> jnp.ndarray:
+    n = min(spec.n_states, vocab)
+    table = _markov_table(spec, vocab, agent_id)        # (n, branch)
+    key = _agent_key(spec, agent_id, step)
+    k0, kb = jax.random.split(key)
+    s0 = jax.random.randint(k0, (batch,), 0, n)
+    branches = jax.random.randint(kb, (batch, seq), 0, spec.branch)
+
+    def body(s, br):
+        nxt = table[s, br]
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(body, s0, branches.T)
+    return toks.T.astype(jnp.int32)                     # (batch, seq)
+
+
+def make_agent_batch(cfg: ArchConfig, shape: ShapeConfig,
+                     spec: StreamSpec, agent_id, step
+                     ) -> Dict[str, Any]:
+    """One training batch for one agent — matches
+    ``repro.models.input_specs(cfg, shape)`` exactly."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = cfg.dtype("compute")
+    E = cfg.d_model
+    key = _agent_key(spec, agent_id, step)
+
+    def toks(b, s, sub):
+        if spec.kind == "markov":
+            return _markov_tokens(spec, cfg.vocab_size, agent_id,
+                                  step * 131 + sub, b, s)
+        return jax.random.randint(jax.random.fold_in(key, sub),
+                                  (b, s), 0, cfg.vocab_size, jnp.int32)
+
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.family == "audio":
+        # MusicGen delay pattern (arXiv:2306.05284 §2.2): codebook c
+        # is shifted right by c frames so step t predicts codebook c
+        # of frame t-c — parallel sampling with RVQ causality kept.
+        # Token 0 doubles as the delay-pad BOS.
+        frames = jnp.stack([toks(B, S, c) % cfg.vocab_size
+                            for c in range(cfg.n_codebooks)], axis=1)
+        t = jnp.stack(
+            [jnp.pad(frames[:, c, :S - c], ((0, 0), (c, 0)))
+             for c in range(cfg.n_codebooks)], axis=1)
+        # delay-pad positions (t < c) carry no loss
+        cb = jnp.arange(cfg.n_codebooks)[None, :, None]
+        pidx = jnp.arange(S)[None, None, :]
+        labels = jnp.where(pidx < cb, -100, t)
+        cond = (jax.random.normal(jax.random.fold_in(key, 7),
+                                  (B, cfg.cond_len, E), jnp.float32)
+                * 0.02).astype(cdt)
+        return {"tokens": t, "labels": labels, "positions": pos,
+                "cond": cond}
+    if cfg.family == "vlm":
+        vp = cfg.vision_prefix
+        t = toks(B, S - vp, 0)
+        vision = (jax.random.normal(jax.random.fold_in(key, 7),
+                                    (B, vp, E), jnp.float32)
+                  * 0.02).astype(cdt)
+        full = jnp.concatenate(
+            [jnp.zeros((B, vp), jnp.int32), t], axis=1)
+        labels = full.at[:, :vp].set(-100)
+        pos3 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                (B, 3, S))
+        return {"tokens": t, "vision": vision, "labels": labels,
+                "positions": pos3}
+    t = toks(B, S, 0)
+    return {"tokens": t, "labels": t, "positions": pos}
+
+
+def make_group_batch(cfg: ArchConfig, shape: ShapeConfig,
+                     spec: StreamSpec, n_agents: int, step
+                     ) -> Dict[str, Any]:
+    """Stacked (n_agents, ...) batch — each agent's own stream."""
+    batches = [make_agent_batch(cfg, shape, spec, a, step)
+               for a in range(n_agents)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *batches)

@@ -1,0 +1,15 @@
+"""Pallas-TPU kernels for the framework's compute hot-spots.
+
+* ``ddal_wavg`` — the paper's eq. 4 m-way weighted gradient reduction
+  (HBM-bandwidth-bound at LLM scale); used by the knowledge stores.
+* ``flash_attention`` — blocked online-softmax causal GQA attention
+  (optional sliding window) for the model-zoo hot path.
+* ``ssd_scan`` — Mamba2 SSD intra-chunk dual form (MXU block matmuls);
+  the inter-chunk recurrence runs as ``lax.associative_scan`` outside.
+
+Each subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper at the model-layer interface) and ``ref.py``
+(pure-jnp oracle). All are validated on CPU with ``interpret=True``;
+on-TPU lowering is selected via ``ArchConfig.attention_impl`` /
+``ssd_impl`` flags.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.ddal_wavg import ops, ref  # noqa: F401
+from repro.kernels.ddal_wavg.kernel import wavg_flat  # noqa: F401

@@ -1,0 +1,62 @@
+"""Pallas-TPU kernel for DDAL's eq. 4 contraction: ḡ = Σ_j w_j·G[j].
+
+The op is a streaming m-way weighted reduction over the full gradient
+vector — at LLM scale it is HBM-bandwidth-bound (arithmetic intensity
+≈ 0.5 FLOP/byte). XLA typically emits m separate scaled adds (reading
+the fp32 accumulator m times); this kernel streams each (m, TILE) slab
+through VMEM once and keeps one fp32 accumulator tile, so HBM traffic
+is exactly one pass over G plus one write of ḡ — the roofline floor.
+
+Tiling: the flat parameter vector is viewed as (tiles, ROWS, 128)
+— 128 lanes, ROWS sublane-multiples — and the grid walks tiles. The
+m-loop is unrolled inside the block (the paper's store holds ≤ tens of
+pieces). Weights ride along as a tiny VMEM block replicated per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_ROWS = 64                  # tile = 64·128 = 8192 elements
+
+
+def _wavg_kernel(w_ref, g_ref, o_ref):
+    """w_ref: (m, 1); g_ref: (m, 1, ROWS, LANES); o_ref: (1, ROWS, LANES)."""
+    m = g_ref.shape[0]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for j in range(m):                       # m is static & small
+        acc = acc + w_ref[j, 0] * g_ref[j].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def wavg_flat(G: jnp.ndarray, w: jnp.ndarray,
+              rows: int = DEFAULT_ROWS,
+              interpret: bool = False) -> jnp.ndarray:
+    """G: (m, N) float, w: (m,) → (N,) fp32 = Σ_j w[j]·G[j]."""
+    m, n = G.shape
+    tile = rows * LANES
+    n_pad = max(tile, ((n + tile - 1) // tile) * tile)
+    if n_pad != n:
+        G = jnp.pad(G, ((0, 0), (0, n_pad - n)))
+    tiles = n_pad // tile
+    G4 = G.reshape(m, tiles, rows, LANES)
+    w2 = w.astype(jnp.float32).reshape(m, 1)
+
+    out = pl.pallas_call(
+        _wavg_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1, rows, LANES), lambda i: (0, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, rows, LANES),
+                                       jnp.float32),
+        interpret=interpret,
+    )(w2, G4)
+    return out.reshape(n_pad)[:n]

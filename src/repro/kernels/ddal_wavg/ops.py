@@ -1,0 +1,36 @@
+"""jit'd wrappers for the eq. 4 weighted-average kernel.
+
+``tree_wavg`` applies the kernel leaf-wise over a stacked gradient
+pytree (leaves (m, *param_shape)) — the exact contraction DDAL's
+knowledge stores perform at every share step. Small leaves (< one
+tile) fall back to the jnp oracle: kernel launch overhead would
+dominate and XLA already fuses them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ddal_wavg import ref
+from repro.kernels.ddal_wavg.kernel import DEFAULT_ROWS, LANES, wavg_flat
+
+_MIN_KERNEL_SIZE = DEFAULT_ROWS * LANES
+
+
+def wavg(G: jnp.ndarray, w: jnp.ndarray, *,
+         interpret: bool = False) -> jnp.ndarray:
+    """Σ_j w_j·G[j] for G: (m, N) → (N,) fp32."""
+    return wavg_flat(G, w, interpret=interpret)
+
+
+def tree_wavg(grads_stacked, w, *, interpret: bool = False):
+    """Kernel-backed version of pytree eq. 4 contraction."""
+    def leaf(x):
+        m = x.shape[0]
+        size = int(x.size) // m
+        if size < _MIN_KERNEL_SIZE:
+            return ref.wavg(x.reshape(m, -1), w).reshape(x.shape[1:])
+        flat = x.reshape(m, size)
+        return wavg_flat(flat, w, interpret=interpret
+                         ).reshape(x.shape[1:])
+    return jax.tree.map(leaf, grads_stacked)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the DDAL eq. 4 weighted-average kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wavg(G: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Σ_j w_j · G[j]  for G: (m, N), w: (m,) → (N,) fp32."""
+    return jnp.einsum("m,mn->n", w.astype(jnp.float32),
+                      G.astype(jnp.float32))
+
+
+def tree_wavg(grads_stacked, w):
+    """Reference over a pytree whose leaves have leading axis m."""
+    def leaf(x):
+        m = x.shape[0]
+        flat = x.reshape(m, -1).astype(jnp.float32)
+        return wavg(flat, w).reshape(x.shape[1:])
+    return jax.tree.map(leaf, grads_stacked)

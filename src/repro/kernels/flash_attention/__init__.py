@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention import ops, ref  # noqa: F401
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd  # noqa: F401

@@ -1,0 +1,143 @@
+"""Pallas-TPU blocked online-softmax (flash) attention.
+
+TPU adaptation (DESIGN.md §3): instead of a CUDA warp-level kernel we
+tile for the MXU and VMEM — (BQ, D)·(D, BK) block matmuls with the
+online-softmax recurrence carried across the innermost grid dimension
+in VMEM scratch. The grid is (B, H, nQ, nK); TPU grids execute
+sequentially with the last axis innermost, so the kernel initialises
+its scratch at j == 0, accumulates over j, and writes the output tile
+at the last *visited* j. Causal and sliding-window structure is
+exploited two ways:
+
+* blocks entirely above the diagonal (or entirely outside the window)
+  are skipped via ``pl.when`` — with a causal mask this halves the
+  work, and with a window of w it bounds it by O(S·w);
+* partially-masked blocks apply the mask inside the block.
+
+GQA is handled in the BlockSpec index maps (kv head = h·K//H) — no
+repeated K/V materialisation in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int,
+               seq_len: int, window: Optional[int], n_k: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    @pl.when(j == 0)
+    def init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    # causal: this k block intersects rows only if k_start <= q_end
+    relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        # and only if the block is not entirely left of every row's window
+        relevant &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (kpos <= qpos) & (kpos < seq_len)
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (BQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                        # (BQ, BK)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, K, S, D). Returns (B, H, S, D)."""
+    assert causal, "only the causal variant is used by the framework"
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    assert H % K == 0, (H, K)
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, max(8, S))
+    block_k = min(block_k, max(8, S))
+    s_pad = ((S + max(block_q, block_k) - 1)
+             // max(block_q, block_k)) * max(block_q, block_k)
+    if s_pad != S:
+        pad = ((0, 0), (0, 0), (0, s_pad - S), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_q = s_pad // block_q
+    n_k = s_pad // block_k
+    group = H // K
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=S, window=window, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, s_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

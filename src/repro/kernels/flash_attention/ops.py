@@ -1,0 +1,25 @@
+"""jit'd wrapper exposing the model-layer interface: (B, S, H, D)
+layout, GQA, causal + optional sliding window."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, S, K, D) → (B, S, H, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

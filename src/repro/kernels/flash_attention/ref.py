@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialised-score
+causal GQA attention with optional sliding window."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None,
+              scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, S, K, D) with H % K == 0.
+    Returns (B, S, H, D) in q.dtype. Softmax in fp32."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    rep = H // K
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    scores = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhij,bjhd->bihd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,24 @@
+"""jit'd wrapper exposing the model-layer interface (the layout used by
+repro.models.ssd.ssd_chunked): (b, nc, l, h, ...) chunked tensors."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_bchl
+
+
+def ssd_intra_chunk(xc, dtc, cs, Bc, Cc, *,
+                    interpret: bool = False) -> jnp.ndarray:
+    """xc: (b, nc, l, h, p); dtc, cs: (b, nc, l, h);
+    Bc, Cc: (b, nc, l, h, n) → y_diag (b, nc, l, h, p) fp32."""
+    b, nc, l, h, p = xc.shape
+    bn = b * nc
+
+    def to_k(t):     # (b,nc,l,h,...) -> (bn,h,l,...)
+        t = jnp.moveaxis(t, 3, 2)                    # (b,nc,h,l,...)
+        return t.reshape((bn, h, l) + t.shape[4:])
+
+    y = ssd_intra_chunk_bchl(to_k(xc), to_k(dtc), to_k(cs),
+                             to_k(Bc), to_k(Cc), interpret=interpret)
+    y = y.reshape(b, nc, h, l, p)
+    return jnp.moveaxis(y, 2, 3)                     # (b,nc,l,h,p)

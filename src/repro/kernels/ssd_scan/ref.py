@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel — the einsum dual
+form from repro.models.ssd (arXiv:2405.21060 §6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk(xc, dtc, cs, Bc, Cc) -> jnp.ndarray:
+    """Intra-chunk ("diagonal block") output of the SSD dual form.
+
+    xc:  (b, nc, l, h, p);  dtc, cs: (b, nc, l, h) fp32;
+    Bc, Cc: (b, nc, l, h, n).  Returns y_diag (b, nc, l, h, p) fp32.
+    """
+    f32 = jnp.float32
+    l = cs.shape[2]
+    cs_h = jnp.moveaxis(cs, 3, 2)                       # (b,nc,h,l)
+    diff = cs_h[..., :, None] - cs_h[..., None, :]      # (b,nc,h,l,l)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bchij",
+                        Cc.astype(f32), Bc.astype(f32))
+    scores = scores * L * jnp.moveaxis(dtc, 3, 2)[..., None, :]
+    return jnp.einsum("bchij,bcjhp->bcihp", scores, xc.astype(f32))

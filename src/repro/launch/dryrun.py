@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI (deliverable e).
+
+Lowers + compiles every (architecture × input shape) pair on the
+production meshes — 16×16 single-pod and 2×16×16 multi-pod — entirely
+from ShapeDtypeStructs (no allocation), printing memory / cost /
+roofline records and writing them to JSON for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--arch", default=None)
+    parser.add_argument("--shape", default=None)
+    parser.add_argument("--all", action="store_true")
+    parser.add_argument("--multi-pod", action="store_true",
+                        help="2×16×16 (512-chip) mesh instead of 16×16")
+    parser.add_argument("--out", default=None, help="JSON output path")
+    parser.add_argument("--verbose", action="store_true",
+                        help="print memory_analysis / cost_analysis")
+    args = parser.parse_args(argv)
+
+    # imports AFTER the XLA_FLAGS line above (jax locks device count
+    # at first initialisation)
+    from repro.configs import ARCH_IDS
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.dryrun_lib import dryrun_pair
+    from repro.launch.mesh import make_production_mesh
+
+    if args.all:
+        pairs = [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            parser.error("need --arch and --shape, or --all")
+        pairs = [(args.arch, args.shape)]
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results = []
+    n_fail = 0
+    for arch_id, shape_name in pairs:
+        res = dryrun_pair(arch_id, shape_name, mesh)
+        results.append(res.to_dict())
+        if res.ok:
+            r = res.roofline
+            print(f"[OK]   {arch_id:22s} {shape_name:12s} "
+                  f"mesh={res.mesh_name:8s} "
+                  f"compile={res.compile_s:6.1f}s "
+                  f"mem/dev={res.memory['total_bytes_per_device']/2**30:7.2f}GiB "
+                  f"t_comp={r['t_compute']:.3e}s "
+                  f"t_mem={r['t_memory']:.3e}s "
+                  f"t_coll={r['t_collective']:.3e}s "
+                  f"dom={r['dominant']:10s} "
+                  f"useful={r['useful_ratio']:.2f}")
+            if args.verbose:
+                print(json.dumps(res.memory, indent=2))
+                print(json.dumps(r, indent=2))
+        else:
+            n_fail += 1
+            print(f"[FAIL] {arch_id:22s} {shape_name:12s}\n{res.error}")
+        sys.stdout.flush()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {len(results)} records to {args.out}")
+    print(f"{len(pairs) - n_fail}/{len(pairs)} pairs lowered+compiled OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Production mesh definitions (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips over ("data", "model").
+    Multi-pod: 2×16×16 = 512 chips over ("pod", "data", "model") —
+    one GARL agent per pod (DESIGN.md §3)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many (CPU) devices exist — tests only."""
+    return jax.make_mesh(shape, axes)
+
+
+def train_rules(mesh) -> dict:
+    """Logical→physical sharding rules for training on ``mesh``."""
+    has_pod = "pod" in mesh.axis_names
+    return {
+        "agent": "pod" if has_pod else None,
+        "batch": "data",
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv_fused": "model",
+        "ff": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "kv_slots": None,        # training: no decode cache
+    }
+
+
+def serve_rules(mesh, global_batch: int) -> dict:
+    """Serving has no agent axis; the batch spreads over every
+    non-model axis when divisible (pod×data on the multi-pod mesh)."""
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    batch = batch_axes if global_batch % n == 0 else None
+    if batch is not None and len(batch) == 1:
+        batch = batch[0]
+    return {
+        "agent": None,
+        "batch": batch,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv_fused": "model",
+        "ff": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        # decode caches shard their SLOT dim over "model" (32768 and
+        # the 8192 sliding window both divide 16) — flash-decoding
+        # style distributed KV sweep; kv-head counts (8, 4) don't
+        # divide 16, so head-sharding would replicate (§Perf it.5)
+        "kv_slots": "model",
+    }

@@ -1,0 +1,119 @@
+"""PartitionSpec trees for every step kind (train / prefill / decode).
+
+Parameters get their specs from the logical-axis table
+(repro.models.param_logical_axes) mapped through the mesh rule set;
+batches shard their leading batch dim over the data axes; caches use
+name+rank rules (KV heads / SSM heads / d_inner over "model", batch
+over the data axes, sequence slots unsharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import cache_specs, param_logical_axes, param_specs
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def _is_axes_tuple(x) -> bool:
+    return isinstance(x, tuple) and all(
+        n is None or isinstance(n, str) for n in x)
+
+
+def param_partition_specs(cfg: ArchConfig, rules: dict,
+                          lead: Tuple[Axis, ...] = ()) -> Any:
+    """Physical PartitionSpecs for the param pytree; ``lead`` prefixes
+    extra axes (the DDAL agent axis)."""
+    shapes = param_specs(cfg)
+    logical = param_logical_axes(cfg, shapes)
+
+    def to_phys(tup):
+        return P(*lead, *[rules.get(n) if n is not None else None
+                          for n in tup])
+
+    return jax.tree.map(to_phys, logical, is_leaf=_is_axes_tuple)
+
+
+def batch_partition_specs(cfg: ArchConfig, shape: ShapeConfig,
+                          batch_axes: Axis,
+                          lead: Tuple[Axis, ...] = ()) -> Any:
+    """Specs for the input batch dict: dim0 (after ``lead``) is the
+    batch dim for every leaf."""
+    from repro.models import input_specs
+    specs = input_specs(cfg, shape)
+
+    def per_leaf(s):
+        extra = len(s.shape) - 1
+        return P(*lead, batch_axes, *([None] * extra))
+
+    return {k: per_leaf(v) for k, v in specs.items()}
+
+
+# -- cache rules -------------------------------------------------------
+_CACHE_RULES = {
+    # key: {rank: {dim: logical}}. KV caches shard batch + SLOTS
+    # (flash-decoding sweep; head dims often don't divide the mesh)
+    "k":      {5: {1: "B", 2: "slots"}, },
+    "v":      {5: {1: "B", 2: "slots"}, },
+    "ck":     {5: {1: "B", 3: "model"}, },
+    "cv":     {5: {1: "B", 3: "model"}, },
+    "pos":    {3: {1: "B", 2: "slots"}},
+    "ckv":    {4: {1: "B", 2: "slots"}},
+    "k_rope": {4: {1: "B", 2: "slots"}},
+    "conv_x": {4: {1: "B", 3: "model"}, 5: {2: "B", 4: "model"}},
+    "conv_B": {4: {1: "B"}, 5: {2: "B"}},
+    "conv_C": {4: {1: "B"}, 5: {2: "B"}},
+    "ssm":    {5: {1: "B", 2: "model"}, 6: {2: "B", 3: "model"}},
+}
+
+
+def cache_partition_specs(cfg: ArchConfig, shape: ShapeConfig,
+                          batch_axes: Axis, model_axis: Axis = "model",
+                          slots_axis: Axis = "model") -> Any:
+    """Specs matching ``repro.models.cache_specs(cfg, shape)``."""
+    cache = cache_specs(cfg, shape)
+
+    def rule(path, leaf):
+        name = None
+        for p in reversed(path):
+            key = getattr(p, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        rank = len(leaf.shape)
+        table = _CACHE_RULES.get(name, {})
+        dims = table.get(rank, {})
+        axes = []
+        for d in range(rank):
+            a = dims.get(d)
+            if a == "B":
+                axes.append(batch_axes)
+            elif a == "model":
+                axes.append(model_axis)
+            elif a == "slots":
+                axes.append(slots_axis)
+            else:
+                axes.append(None)
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+# -- TrainState (adamw layout) ----------------------------------------
+def train_state_partition_specs(cfg: ArchConfig, rules: dict,
+                                agent_axis: Axis) -> Any:
+    """Specs for repro.core.sharded_ddal.TrainState with an AdamW
+    optimiser (m/v mirror params; count/step are scalars)."""
+    from repro.core.sharded_ddal import Knowledge, TrainState
+    pspec = param_partition_specs(cfg, rules, lead=(agent_axis,))
+    vec = P(agent_axis)
+    return TrainState(
+        params=pspec,
+        opt_state={"m": pspec, "v": pspec, "count": vec},
+        know=Knowledge(tg=pspec, tsum=vec, rg=pspec, rsum=vec),
+        step=P(),
+    )

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    Model,
+    cache_specs,
+    get_model,
+    input_specs,
+    make_batch,
+    param_logical_axes,
+    param_specs,
+)

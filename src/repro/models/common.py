@@ -1,0 +1,118 @@
+"""Shared layer primitives: norms, linear init, embeddings, masks."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import shard
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def sinusoidal_positions(positions, dim: int, max_timescale: float = 1e4):
+    """Classic sinusoidal embeddings; positions (..., S) int → (..., S, dim)."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(max_timescale) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def causal_mask_bias(q_pos, k_pos, window: Optional[int] = None,
+                     k_valid=None):
+    """Additive attention bias from position comparisons.
+
+    q_pos: (B, Sq) absolute positions of the queries.
+    k_pos: (B, Sk) absolute positions of the keys.
+    window: sliding-window width (None = full causal).
+    k_valid: optional (B, Sk) bool — marks live cache slots.
+    Returns (B, 1, Sq, Sk) bias of 0 / -inf (broadcast over heads).
+    """
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    neg = jnp.asarray(-1e30, jnp.float32)
+    return jnp.where(ok, 0.0, neg)[:, None, :, :]
+
+
+def softmax_attention(q, k, v, bias, scale: float,
+                      scores_dtype=jnp.float32):
+    """Reference attention. q: (B,Sq,H,Dk), k: (B,Sk,K,Dk), v:
+    (B,Sk,K,Dv) with H = G·K (GQA — query heads grouped onto kv heads;
+    Dv may differ from Dk, e.g. MLA). bias: (B,1,Sq,Sk).
+
+    GQA is expressed by EXPANDING k/v to the H query heads with a
+    static head gather rather than reshaping q to (K, G, D): reshaping
+    a head-sharded dim whose size doesn't divide the mesh axis (56H or
+    24H over model=16) forces GSPMD into "involuntary full
+    rematerialization" copies — replicating multi-GiB score tensors
+    (EXPERIMENTS.md §Perf, yi-34b iteration 1). With the gather, every
+    attention tensor keeps one uniformly-(padded-)sharded head dim and
+    the only cross-device movement is the small K-head k/v gather.
+    """
+    B, Sq, H, Dk = q.shape
+    K = k.shape[2]
+    Dv = v.shape[3]
+    if H != K:
+        idx = jnp.arange(H) // (H // K)
+        k = jnp.take(k, idx, axis=2)          # (B,Sk,H,Dk)
+        v = jnp.take(v, idx, axis=2)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+    # scores_dtype=bfloat16 halves the HBM footprint of the (B,H,S,S)
+    # score/prob pipeline — the dominant memory term at 4k+ context
+    # (EXPERIMENTS.md §Perf, yi-34b iteration 2). The matmuls still
+    # accumulate in fp32 (preferred_element_type); only the
+    # materialised scores/probs are narrow. fp32 remains the default.
+    sdt = jnp.dtype(scores_dtype)
+    # the dot must EMIT sdt directly — casting an f32 dot output still
+    # materialises the f32 (B,H,S,S) tensor (§Perf iteration 3a,
+    # refuted); max-subtraction keeps bf16 softmax well-conditioned.
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(sdt),
+                        k.astype(sdt),
+                        preferred_element_type=sdt)
+    scores = scores * jnp.asarray(scale, sdt) + bias.astype(sdt)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(sdt),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def cross_entropy(logits, labels, ignore=-100):
+    """Token-mean CE with ignore mask; logits (..., V) fp-any, fp32 math."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def shard_activations(x):
+    """Canonical activation sharding: batch over 'data'."""
+    names = ["batch"] + [None] * (x.ndim - 1)
+    return shard(x, *names)

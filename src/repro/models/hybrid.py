@@ -1,0 +1,195 @@
+"""Zamba2-style hybrid: super-blocks of Mamba2 layers punctuated by a
+SHARED attention/MLP block with per-call-site LoRA adapters
+(arXiv:2411.15242). The outer scan runs over super-blocks (the shared
+block's weights are captured by closure — one copy in HLO), the inner
+scan over the Mamba2 layers of each block.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import shard
+from repro.models import attention as attn
+from repro.models.common import cross_entropy, dense_init, embed_init, rms_norm
+from repro.models.mamba2 import (init_mamba2, make_mamba_state,
+                                 mamba2_decode, mamba2_forward)
+from repro.models.mlp import init_swiglu, swiglu
+
+_LORA_TARGETS = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+}
+
+
+def _init_lora(cfg, key, shapes):
+    r = cfg.hybrid.lora_rank
+    dt = cfg.dtype("param")
+    p = {}
+    for name, (din, dout) in shapes.items():
+        ka = jax.random.fold_in(key, zlib.crc32(name.encode()) % 2**31)
+        p[name] = {"a": dense_init(ka, (din, r), dt),
+                   "b": jnp.zeros((r, dout), dt)}
+    return p
+
+
+def _lora_shapes(cfg):
+    E, H, K, D, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                     cfg.head_dim, cfg.d_ff)
+    return {
+        "wq": (E, H * D), "wk": (E, K * D), "wv": (E, K * D),
+        "wo": (H * D, E),
+        "w_gate": (E, F), "w_up": (E, F), "w_down": (F, E),
+    }
+
+
+def _merge_lora(shared, lora, cdt):
+    """Effective weights for one call-site: W + A·B."""
+    out = dict(shared)
+    out["attn"] = dict(shared["attn"])
+    out["mlp"] = dict(shared["mlp"])
+    for grp, names in _LORA_TARGETS.items():
+        for n in names:
+            delta = (lora[n]["a"].astype(cdt) @ lora[n]["b"].astype(cdt))
+            out[grp][n] = shared[grp][n].astype(cdt) + delta
+    return out
+
+
+def init_hybrid(cfg, key):
+    hy = cfg.hybrid
+    k_e, k_m, k_s, k_l, k_t, k_h = jax.random.split(key, 6)
+    dt = cfg.dtype("param")
+    params = {
+        "embed": embed_init(k_e, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(k_h, (cfg.d_model, cfg.vocab_size), dt),
+    }
+    # shared attention/MLP block (single copy)
+    ka, kf = jax.random.split(k_s)
+    params["shared"] = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": attn.init_self_attention(cfg, ka),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": init_swiglu(kf, cfg.d_model, cfg.d_ff, dt),
+    }
+
+    def one_mamba(k):
+        return {"ln": jnp.ones((cfg.d_model,), dt),
+                "mamba": init_mamba2(cfg, k)}
+
+    nb, mpb = hy.n_super_blocks, hy.mamba_per_block
+    keys = jax.random.split(k_m, (nb, mpb))
+    params["mamba_blocks"] = jax.vmap(jax.vmap(one_mamba))(keys)
+    params["lora"] = jax.vmap(
+        lambda k: _init_lora(cfg, k, _lora_shapes(cfg)))(
+        jax.random.split(k_l, nb))
+    if hy.tail_mamba:
+        params["tail"] = jax.vmap(one_mamba)(
+            jax.random.split(k_t, hy.tail_mamba))
+    return params
+
+
+def _shared_block(cfg, weights, x, positions, kv_cache):
+    h = rms_norm(x, weights["ln1"], cfg.norm_eps)
+    a, new_kv = attn.self_attention(cfg, weights["attn"], h, positions,
+                                    layer_cache=kv_cache)
+    x = x + a
+    h2 = rms_norm(x, weights["ln2"], cfg.norm_eps)
+    x = x + swiglu(weights["mlp"], h2, cfg.dtype("compute"))
+    return x, new_kv
+
+
+def _mamba_sublayer(cfg, lp, x, lstate, decode: bool):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    fn = mamba2_decode if decode else mamba2_forward
+    o, new_state = fn(cfg, lp["mamba"], h, lstate)
+    return x + o, new_state
+
+
+def hybrid_forward(cfg, params, batch, cache=None, decode=False):
+    """cache: {"mamba": stacked (nb, mpb, ...) states, "kv": (nb, ...)
+    KV caches, "tail": (tail, ...) states} or None (training)."""
+    cdt = cfg.dtype("compute")
+    x = params["embed"].astype(cdt)[batch["tokens"]]
+    x = shard(x, "batch", None, None)
+    positions = batch["positions"]
+    want_cache = cache is not None
+    shared = params["shared"]
+
+    def inner(xc, per_layer):
+        lp, lstate = per_layer
+        xo, st = _mamba_sublayer(cfg, lp, xc, lstate, decode)
+        return xo, (st if want_cache else None)
+
+    def super_block(xc, xs):
+        mparams, lora, mstate, kvc = xs
+        if want_cache:
+            xc, states = jax.lax.scan(inner, xc, (mparams, mstate),
+                                      unroll=cfg.unroll_layers)
+        else:
+            xc, _ = jax.lax.scan(lambda c, lp: inner(c, (lp, None)),
+                                 xc, mparams, unroll=cfg.unroll_layers)
+            states = None
+        weights = _merge_lora(shared, lora, cdt)
+        xc, new_kv = _shared_block(cfg, weights, xc, positions, kvc)
+        return xc, (states, new_kv)
+
+    body_fn = super_block
+    if cfg.remat and not want_cache:
+        body_fn = jax.checkpoint(
+            super_block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if want_cache:
+        xs = (params["mamba_blocks"], params["lora"],
+              cache["mamba"], cache["kv"])
+    else:
+        xs = (params["mamba_blocks"], params["lora"], None, None)
+    x, (new_mstates, new_kvs) = jax.lax.scan(body_fn, x, xs,
+                                             unroll=cfg.unroll_layers)
+
+    new_tail = None
+    if cfg.hybrid.tail_mamba:
+        tstate = cache["tail"] if want_cache else None
+        if want_cache:
+            x, new_tail = jax.lax.scan(inner, x,
+                                       (params["tail"], tstate),
+                                       unroll=cfg.unroll_layers)
+        else:
+            x, _ = jax.lax.scan(lambda c, lp: inner(c, (lp, None)),
+                                x, params["tail"],
+                                unroll=cfg.unroll_layers)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x @ params["lm_head"].astype(cdt), "batch", None, "vocab")
+    new_cache = None
+    if want_cache:
+        new_cache = {"mamba": new_mstates, "kv": new_kvs,
+                     "tail": new_tail}
+    return logits, jnp.float32(0.0), new_cache
+
+
+def hybrid_decode(cfg, params, batch, cache):
+    logits, _, new_cache = hybrid_forward(cfg, params, batch, cache,
+                                          decode=True)
+    return logits, new_cache
+
+
+def hybrid_loss(cfg, params, batch):
+    logits, aux, _ = hybrid_forward(cfg, params, batch)
+    return cross_entropy(logits, batch["labels"]) + aux
+
+
+def make_hybrid_cache(cfg, batch: int, max_len: int):
+    hy = cfg.hybrid
+    nb, mpb = hy.n_super_blocks, hy.mamba_per_block
+    cache = {
+        "mamba": jax.tree.map(
+            lambda x: x.reshape((nb, mpb) + x.shape[1:]),
+            make_mamba_state(cfg, batch, nb * mpb)),
+        "kv": attn.make_kv_cache(cfg, batch, max_len, nb),
+        "tail": make_mamba_state(cfg, batch, hy.tail_mamba),
+    }
+    return cache

@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU MLP (MusicGen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import shard
+from repro.models.common import dense_init
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x, compute_dtype):
+    g = x @ p["w_gate"].astype(compute_dtype)
+    u = x @ p["w_up"].astype(compute_dtype)
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_down"].astype(compute_dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": dense_init(k2, (d_ff, d_model), dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x, compute_dtype):
+    h = x @ p["w1"].astype(compute_dtype) + p["b1"].astype(compute_dtype)
+    h = jax.nn.gelu(h)
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w2"].astype(compute_dtype) + p["b2"].astype(compute_dtype)

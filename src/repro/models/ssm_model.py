@@ -1,0 +1,89 @@
+"""Mamba2 language model (attention-free SSM stack)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import shard
+from repro.models.common import cross_entropy, dense_init, embed_init, rms_norm
+from repro.models.mamba2 import (init_mamba2, make_mamba_state,
+                                 mamba2_decode, mamba2_forward)
+
+
+def init_ssm_model(cfg, key):
+    k_e, k_l, k_h = jax.random.split(key, 3)
+    dt = cfg.dtype("param")
+    params = {
+        "embed": embed_init(k_e, (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_h, (cfg.d_model, cfg.vocab_size), dt)
+    keys = jax.random.split(k_l, cfg.n_layers)
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), dt),
+                "mamba": init_mamba2(cfg, k)}
+    params["layers"] = jax.vmap(one)(keys)
+    return params
+
+
+def _head(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(cfg.dtype("compute"))
+    return shard(x @ w, "batch", None, "vocab")
+
+
+def ssm_forward(cfg, params, batch, cache=None):
+    """Full-sequence pass; returns (logits, aux=0, decode_state)."""
+    cdt = cfg.dtype("compute")
+    x = params["embed"].astype(cdt)[batch["tokens"]]
+    x = shard(x, "batch", None, None)
+    want_state = cache is not None
+
+    def body(xc, per_layer):
+        lp, lstate = per_layer
+        h = rms_norm(xc, lp["ln"], cfg.norm_eps)
+        o, new_state = mamba2_forward(cfg, lp["mamba"], h, lstate)
+        return xc + o, (new_state if want_state else None)
+
+    body_fn = body
+    if cfg.remat and not want_state:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if want_state:
+        x, states = jax.lax.scan(body_fn, x,
+                                 (params["layers"], cache),
+                                 unroll=cfg.unroll_layers)
+    else:
+        x, _ = jax.lax.scan(lambda c, lp: body_fn(c, (lp, None)),
+                            x, params["layers"],
+                            unroll=cfg.unroll_layers)
+        states = None
+    return _head(cfg, params, x), jnp.float32(0.0), states
+
+
+def ssm_decode(cfg, params, batch, cache):
+    cdt = cfg.dtype("compute")
+    x = params["embed"].astype(cdt)[batch["tokens"]]
+
+    def body(xc, per_layer):
+        lp, lstate = per_layer
+        h = rms_norm(xc, lp["ln"], cfg.norm_eps)
+        o, new_state = mamba2_decode(cfg, lp["mamba"], h, lstate)
+        return xc + o, new_state
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache),
+                             unroll=cfg.unroll_layers)
+    return _head(cfg, params, x), states
+
+
+def ssm_loss(cfg, params, batch):
+    logits, aux, _ = ssm_forward(cfg, params, batch)
+    return cross_entropy(logits, batch["labels"]) + aux
+
+
+def make_ssm_cache(cfg, batch: int, max_len: int = 0):
+    return make_mamba_state(cfg, batch, cfg.n_layers)

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    make_optimizer,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    warmup_cosine,
+)

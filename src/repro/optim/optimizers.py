@@ -1,0 +1,111 @@
+"""Optimisers as pure (init, update) pairs over parameter pytrees.
+
+No optax in this environment — these are self-contained and used both
+by the RL agents (paper repro) and the LLM-scale training loop. The
+``update`` signature takes the *gradient source* produced by DDAL
+(local gradients during warm-up, the eq. 4 weighted average after
+sharing starts) so the optimiser is agnostic to group-agent learning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import (global_norm_clip, tree_add_scaled,
+                                 tree_map, tree_zeros_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, clip: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        if clip is not None:
+            grads, _ = global_norm_clip(grads, clip)
+        lr_t = _lr_at(lr, step)
+        new_params = tree_map(
+            lambda p, g: p - lr_t.astype(p.dtype) * g.astype(p.dtype),
+            params, grads)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, clip: Optional[float] = None
+             ) -> Optimizer:
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        if clip is not None:
+            grads, _ = global_norm_clip(grads, clip)
+        m = tree_map(lambda mm, g: beta * mm + g.astype(mm.dtype),
+                     state["m"], grads)
+        lr_t = _lr_at(lr, step)
+        new_params = tree_map(
+            lambda p, mm: p - lr_t.astype(p.dtype) * mm.astype(p.dtype),
+            params, m)
+        return new_params, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip: Optional[float] = 1.0
+          ) -> Optimizer:
+    """AdamW with fp32 moments (regardless of param dtype)."""
+    def init(params):
+        f32 = lambda t: tree_map(  # noqa: E731
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return {"m": f32(params), "v": f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        if clip is not None:
+            grads, _ = global_norm_clip(grads, clip)
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        m = tree_map(lambda mm, g: b1 * mm + (1 - b1) *
+                     g.astype(jnp.float32), state["m"], grads)
+        v = tree_map(lambda vv, g: b2 * vv + (1 - b2) *
+                     jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1.0 - b1 ** cf
+        bc2 = 1.0 - b2 ** cf
+        lr_t = _lr_at(lr, step)
+
+        def upd(p, mm, vv):
+            mh = mm / bc1
+            vh = vv / bc2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        new_params = tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

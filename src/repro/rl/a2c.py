@@ -1,0 +1,83 @@
+"""A2C agent for DDA3C (paper §5.2).
+
+One epoch (Algorithm 1 lines 2–4): run one episode, compute the
+one-step advantage loss and its gradients:
+
+    Q(s_t, a_t) = r                      (terminal s_{t+1})
+                = r + γ V(s_{t+1})       (non-terminal)   [paper eq. 9]
+    ∇θ log π_θ(a_t|s_t) · (Q(s_t,a_t) − V(s_t))           [paper eq. 8]
+
+plus the value-network MSE on the same one-step target. Exposed as the
+``gen_grads`` / ``apply_grads`` / ``params_of`` callbacks DDAL consumes
+("DDAL should not be restricted by agent type", paper §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.rl import networks as nets
+from repro.rl.rollout import Trajectory, episode_return, run_episode
+
+
+class A2CState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray       # () int32 — optimiser step counter
+
+
+def init_a2c(key, env, opt: Optimizer, hidden: int = 64) -> A2CState:
+    params = nets.init_policy_value(key, env.obs_dim, env.n_actions,
+                                    hidden)
+    return A2CState(params=params, opt_state=opt.init(params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def a2c_loss(params, traj: Trajectory, gamma: float,
+             value_coef: float = 0.5, entropy_coef: float = 0.01):
+    logits = nets.policy_logits(params, traj.obs)           # (T, A)
+    v = nets.state_value(params, traj.obs)                  # (T,)
+    v_next = nets.state_value(params, traj.next_obs)        # (T,)
+    q = traj.rewards + gamma * jnp.where(traj.dones, 0.0,
+                                         jax.lax.stop_gradient(v_next))
+    adv = q - v
+    logp = jax.nn.log_softmax(logits)
+    logp_a = jnp.take_along_axis(logp, traj.actions[:, None],
+                                 axis=-1)[:, 0]
+    pg = -logp_a * jax.lax.stop_gradient(adv)
+    value = 0.5 * jnp.square(adv)
+    probs = jax.nn.softmax(logits)
+    entropy = -jnp.sum(probs * logp, axis=-1)
+    per_step = pg + value_coef * value - entropy_coef * entropy
+    denom = jnp.maximum(jnp.sum(traj.mask), 1.0)
+    return jnp.sum(per_step * traj.mask) / denom            # average loss
+
+
+def make_a2c_callbacks(env, opt: Optimizer, gamma: float = 0.99,
+                       entropy_coef: float = 0.01):
+    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL."""
+
+    def gen_grads(state: A2CState, key) -> Tuple[Any, Any, A2CState]:
+        def select(obs, k):
+            logits = nets.policy_logits(state.params, obs)
+            return jax.random.categorical(k, logits)
+
+        traj = run_episode(env, select, key)
+        loss, grads = jax.value_and_grad(a2c_loss)(
+            state.params, traj, gamma, entropy_coef=entropy_coef)
+        metrics = {"loss": loss, "return": episode_return(traj)}
+        return grads, metrics, state
+
+    def apply_grads(state: A2CState, grads) -> A2CState:
+        params, opt_state = opt.update(grads, state.opt_state,
+                                       state.params, state.step)
+        return A2CState(params=params, opt_state=opt_state,
+                        step=state.step + 1)
+
+    def params_of(state: A2CState):
+        return state.params
+
+    return gen_grads, apply_grads, params_of

@@ -1,0 +1,182 @@
+"""Double-dueling DQN agent for DDADQN (paper §5.1).
+
+Gradients follow paper eq. 5–6:
+
+    ∇θ L = ∇θ ( y_t − Q(φ_t, a_t; θ) )²
+    y_t  = r                                          (terminal)
+         = r + γ Q(φ', argmax_a' Q(φ', a'; θ); θ⁻)    (double DQN)
+
+with the dueling head combine of eq. 7 (repro.rl.networks) and a
+target network θ⁻ refreshed every ``target_period`` updates (Mnih et
+al. 2015). Experiences go through a fixed-size replay ring buffer; one
+epoch = one episode collected + one minibatch gradient (Algorithm 1
+lines 2–4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_map
+from repro.optim import Optimizer
+from repro.rl import networks as nets
+from repro.rl.rollout import episode_return, run_episode
+
+
+class Replay(NamedTuple):
+    obs: jnp.ndarray        # (C, obs_dim)
+    actions: jnp.ndarray    # (C,) int32
+    rewards: jnp.ndarray    # (C,)
+    next_obs: jnp.ndarray   # (C, obs_dim)
+    dones: jnp.ndarray      # (C,) bool
+    ptr: jnp.ndarray        # () int32
+    size: jnp.ndarray       # () int32
+
+
+def make_replay(capacity: int, obs_dim: int) -> Replay:
+    return Replay(
+        obs=jnp.zeros((capacity, obs_dim), jnp.float32),
+        actions=jnp.zeros((capacity,), jnp.int32),
+        rewards=jnp.zeros((capacity,), jnp.float32),
+        next_obs=jnp.zeros((capacity, obs_dim), jnp.float32),
+        dones=jnp.zeros((capacity,), bool),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def replay_add_traj(rep: Replay, traj) -> Replay:
+    """Append the (masked) steps of one trajectory."""
+    C = rep.actions.shape[0]
+
+    def body(r, i):
+        live = traj.mask[i] > 0
+        slot = r.ptr % C
+        en = live
+
+        def put(buf, x):
+            new = buf.at[slot].set(x.astype(buf.dtype))
+            return jnp.where(jnp.reshape(en, (1,) * new.ndim), new, buf)
+
+        r2 = Replay(
+            obs=put(r.obs, traj.obs[i]),
+            actions=put(r.actions, traj.actions[i]),
+            rewards=put(r.rewards, traj.rewards[i]),
+            next_obs=put(r.next_obs, traj.next_obs[i]),
+            dones=put(r.dones, traj.dones[i]),
+            ptr=r.ptr + en.astype(jnp.int32),
+            size=jnp.minimum(r.size + en.astype(jnp.int32), C),
+        )
+        return r2, None
+
+    T = traj.actions.shape[0]
+    rep, _ = jax.lax.scan(body, rep, jnp.arange(T))
+    return rep
+
+
+def replay_sample(rep: Replay, key, batch: int):
+    idx = jax.random.randint(key, (batch,), 0,
+                             jnp.maximum(rep.size, 1))
+    return (rep.obs[idx], rep.actions[idx], rep.rewards[idx],
+            rep.next_obs[idx], rep.dones[idx])
+
+
+class DQNState(NamedTuple):
+    params: Any
+    target_params: Any
+    opt_state: Any
+    replay: Replay
+    step: jnp.ndarray       # () int32 — number of updates so far
+    eps_t: jnp.ndarray      # () int32 — exploration anneal counter
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    gamma: float = 0.99
+    batch: int = 64
+    capacity: int = 10_000
+    target_period: int = 100     # copy θ→θ⁻ every C updates
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay: int = 2_000       # linear anneal epochs
+    hidden: int = 64
+
+
+def init_dqn(key, env, opt: Optimizer, cfg: DQNConfig) -> DQNState:
+    params = nets.init_dueling_q(key, env.obs_dim, env.n_actions,
+                                 cfg.hidden)
+    return DQNState(
+        params=params,
+        target_params=tree_map(lambda x: x, params),
+        opt_state=opt.init(params),
+        replay=make_replay(cfg.capacity, env.obs_dim),
+        step=jnp.zeros((), jnp.int32),
+        eps_t=jnp.zeros((), jnp.int32),
+    )
+
+
+def dqn_loss(params, target_params, batch, gamma: float):
+    obs, actions, rewards, next_obs, dones = batch
+    q = nets.dueling_q_values(params, obs)                  # (B, A)
+    q_a = jnp.take_along_axis(q, actions[:, None], axis=-1)[:, 0]
+    # double DQN: online net selects, target net evaluates (eq. 6)
+    q_next_online = nets.dueling_q_values(params, next_obs)
+    a_star = jnp.argmax(q_next_online, axis=-1)
+    q_next_tgt = nets.dueling_q_values(target_params, next_obs)
+    q_star = jnp.take_along_axis(q_next_tgt, a_star[:, None],
+                                 axis=-1)[:, 0]
+    y = rewards + gamma * jnp.where(dones, 0.0,
+                                    jax.lax.stop_gradient(q_star))
+    return jnp.mean(jnp.square(y - q_a))                    # eq. 5
+
+
+def make_dqn_callbacks(env, opt: Optimizer, cfg: DQNConfig):
+    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL."""
+
+    def epsilon(t):
+        frac = jnp.clip(t.astype(jnp.float32) / cfg.eps_decay, 0.0, 1.0)
+        return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
+
+    def gen_grads(state: DQNState, key) -> Tuple[Any, Any, DQNState]:
+        k_ep, k_sample = jax.random.split(key)
+        eps = epsilon(state.eps_t)
+
+        def select(obs, k):
+            kg, ke = jax.random.split(k)
+            greedy = jnp.argmax(nets.dueling_q_values(state.params, obs))
+            rand = jax.random.randint(ke, (), 0, env.n_actions)
+            return jnp.where(jax.random.uniform(kg) < eps, rand, greedy)
+
+        traj = run_episode(env, select, k_ep)
+        replay = replay_add_traj(state.replay, traj)
+        batch = replay_sample(replay, k_sample, cfg.batch)
+        loss, grads = jax.value_and_grad(dqn_loss)(
+            state.params, state.target_params, batch, cfg.gamma)
+        # don't learn from a near-empty buffer
+        ok = (replay.size >= cfg.batch).astype(jnp.float32)
+        grads = tree_map(lambda g: g * ok, grads)
+        new_state = DQNState(state.params, state.target_params,
+                             state.opt_state, replay, state.step,
+                             state.eps_t + 1)
+        metrics = {"loss": loss, "return": episode_return(traj),
+                   "epsilon": eps}
+        return grads, metrics, new_state
+
+    def apply_grads(state: DQNState, grads) -> DQNState:
+        params, opt_state = opt.update(grads, state.opt_state,
+                                       state.params, state.step)
+        step = state.step + 1
+        sync = (step % cfg.target_period) == 0
+        target = tree_map(
+            lambda t, p: jnp.where(sync, p, t),
+            state.target_params, params)
+        return DQNState(params, target, opt_state, state.replay, step,
+                        state.eps_t)
+
+    def params_of(state: DQNState):
+        return state.params
+
+    return gen_grads, apply_grads, params_of

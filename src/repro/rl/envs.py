@@ -1,0 +1,132 @@
+"""Pure-JAX environments for the paper's experiments.
+
+``CartPole`` reproduces OpenAI Gym's CartPole-v0 dynamics exactly
+(Barto-Sutton-Anderson cart-pole, Euler integration, the same
+constants as gym.envs.classic_control.CartPoleEnv). The paper's §6
+evaluation caps episodes at 100 steps, so a total reward of 100 is the
+optimum. ``GridWorld`` is a second, *different* environment used to
+exercise the general group-MDP case (heterogeneous tasks, R_j ≠
+uniform) that the paper formulates but does not evaluate.
+
+Both follow the AgentEnv protocol (repro.core.group_mdp):
+
+    env.reset(key)              -> state
+    env.step(state, action)     -> (state, obs, reward, done)
+    env.obs(state)              -> observation
+    env.obs_dim / env.n_actions
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CartPoleState(NamedTuple):
+    x: jnp.ndarray          # () fp32 — cart position
+    x_dot: jnp.ndarray
+    theta: jnp.ndarray      # pole angle (rad)
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray          # () int32 — step count
+    done: jnp.ndarray       # () bool
+
+
+@dataclasses.dataclass(frozen=True)
+class CartPole:
+    """CartPole-v0 (gym classic_control constants)."""
+    gravity: float = 9.8
+    masscart: float = 1.0
+    masspole: float = 0.1
+    length: float = 0.5            # half pole length
+    force_mag: float = 10.0
+    tau: float = 0.02
+    theta_threshold: float = 12 * 2 * jnp.pi / 360
+    x_threshold: float = 2.4
+    max_steps: int = 100           # paper §6: max 100 steps per episode
+
+    obs_dim: int = 4
+    n_actions: int = 2
+
+    def reset(self, key) -> CartPoleState:
+        vals = jax.random.uniform(key, (4,), jnp.float32, -0.05, 0.05)
+        return CartPoleState(vals[0], vals[1], vals[2], vals[3],
+                             jnp.zeros((), jnp.int32),
+                             jnp.zeros((), bool))
+
+    def obs(self, s: CartPoleState) -> jnp.ndarray:
+        return jnp.stack([s.x, s.x_dot, s.theta, s.theta_dot])
+
+    def step(self, s: CartPoleState, action
+             ) -> Tuple[CartPoleState, jnp.ndarray, jnp.ndarray,
+                        jnp.ndarray]:
+        total_mass = self.masscart + self.masspole
+        polemass_length = self.masspole * self.length
+        force = jnp.where(action == 1, self.force_mag, -self.force_mag)
+        costh = jnp.cos(s.theta)
+        sinth = jnp.sin(s.theta)
+        temp = (force + polemass_length * s.theta_dot ** 2 * sinth
+                ) / total_mass
+        thetaacc = (self.gravity * sinth - costh * temp) / (
+            self.length * (4.0 / 3.0 - self.masspole * costh ** 2 /
+                           total_mass))
+        xacc = temp - polemass_length * thetaacc * costh / total_mass
+        x = s.x + self.tau * s.x_dot
+        x_dot = s.x_dot + self.tau * xacc
+        theta = s.theta + self.tau * s.theta_dot
+        theta_dot = s.theta_dot + self.tau * thetaacc
+        t = s.t + 1
+        fell = ((jnp.abs(x) > self.x_threshold) |
+                (jnp.abs(theta) > self.theta_threshold))
+        done = fell | (t >= self.max_steps) | s.done
+        # gym gives +1 for every step taken, including the failing one;
+        # but once an episode was already done, further steps score 0.
+        reward = jnp.where(s.done, 0.0, 1.0)
+        ns = CartPoleState(x, x_dot, theta, theta_dot, t, done)
+        return ns, self.obs(ns), reward, done
+
+
+class GridState(NamedTuple):
+    pos: jnp.ndarray        # () int32 — flattened cell index
+    t: jnp.ndarray
+    done: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GridWorld:
+    """N×N gridworld: start top-left, goal bottom-right, step cost
+    -0.01, goal +1. Observation is the one-hot cell. Used for the
+    heterogeneous-group tests (each agent can get a different size)."""
+    size: int = 5
+    max_steps: int = 50
+
+    @property
+    def obs_dim(self) -> int:
+        return self.size * self.size
+
+    n_actions: int = 4      # up / down / left / right
+
+    def reset(self, key) -> GridState:
+        del key
+        return GridState(jnp.zeros((), jnp.int32),
+                         jnp.zeros((), jnp.int32), jnp.zeros((), bool))
+
+    def obs(self, s: GridState) -> jnp.ndarray:
+        return jax.nn.one_hot(s.pos, self.obs_dim, dtype=jnp.float32)
+
+    def step(self, s: GridState, action):
+        n = self.size
+        r, c = s.pos // n, s.pos % n
+        dr = jnp.array([-1, 1, 0, 0], jnp.int32)[action]
+        dc = jnp.array([0, 0, -1, 1], jnp.int32)[action]
+        r = jnp.clip(r + dr, 0, n - 1)
+        c = jnp.clip(c + dc, 0, n - 1)
+        pos = r * n + c
+        t = s.t + 1
+        at_goal = pos == (n * n - 1)
+        done = at_goal | (t >= self.max_steps) | s.done
+        reward = jnp.where(s.done, 0.0,
+                           jnp.where(at_goal, 1.0, -0.01))
+        ns = GridState(pos, t, done)
+        return ns, self.obs(ns), reward, done

@@ -1,0 +1,81 @@
+"""Small MLP networks for the RL agents (paper §5.1–5.2).
+
+* ``policy_value``: A2C's two networks — policy π_θ(a|s) and state
+  value V(s) (paper eq. 8–9).
+* ``dueling_q``: the dueling architecture (paper eq. 7):
+  Q(s, a) = A(s, a) + V(s) from two heads over a shared trunk.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_linear(key, din: int, dout: int) -> Dict[str, jnp.ndarray]:
+    k1, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / din)
+    return {"w": jax.random.normal(k1, (din, dout), jnp.float32) * scale,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, dims: Sequence[int]) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [_init_linear(k, a, b)
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp(params: list, x, final_act: bool = False):
+    for i, p in enumerate(params):
+        x = _linear(p, x)
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ----------------------------------------------------------------------
+# A2C: policy network + value network
+# ----------------------------------------------------------------------
+def init_policy_value(key, obs_dim: int, n_actions: int,
+                      hidden: int = 64) -> Dict[str, Any]:
+    kp, kv = jax.random.split(key)
+    return {
+        "policy": init_mlp(kp, (obs_dim, hidden, hidden, n_actions)),
+        "value": init_mlp(kv, (obs_dim, hidden, hidden, 1)),
+    }
+
+
+def policy_logits(params, obs):
+    return mlp(params["policy"], obs)
+
+
+def state_value(params, obs):
+    return mlp(params["value"], obs)[..., 0]
+
+
+# ----------------------------------------------------------------------
+# Dueling double-DQN (paper §5.1): shared trunk, A and V heads,
+# Q(s,a) = V(s) + A(s,a) - mean_a A(s,a)  (Wang et al. 2016 combine;
+# the paper's eq. 7 omits the mean-baseline — we keep it for
+# identifiability, which only shifts Q by a constant per state).
+# ----------------------------------------------------------------------
+def init_dueling_q(key, obs_dim: int, n_actions: int,
+                   hidden: int = 64) -> Dict[str, Any]:
+    kt, ka, kv = jax.random.split(key, 3)
+    return {
+        "trunk": init_mlp(kt, (obs_dim, hidden)),
+        "adv": init_mlp(ka, (hidden, hidden, n_actions)),
+        "val": init_mlp(kv, (hidden, hidden, 1)),
+    }
+
+
+def dueling_q_values(params, obs):
+    h = mlp(params["trunk"], obs, final_act=True)
+    a = mlp(params["adv"], h)
+    v = mlp(params["val"], h)
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)

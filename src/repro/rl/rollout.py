@@ -1,0 +1,43 @@
+"""Episode rollout via ``lax.scan`` (Algorithm 1 line 2: "generate k
+experiences"). One epoch = one episode capped at ``env.max_steps``;
+post-terminal steps are masked out, matching the paper's §6 setup."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Trajectory(NamedTuple):
+    obs: jnp.ndarray        # (T, obs_dim)
+    actions: jnp.ndarray    # (T,) int32
+    rewards: jnp.ndarray    # (T,)
+    next_obs: jnp.ndarray   # (T, obs_dim)
+    dones: jnp.ndarray      # (T,) bool — episode over AFTER this step
+    mask: jnp.ndarray       # (T,) fp32 — 1 for real steps
+
+
+def run_episode(env, select_action: Callable, key) -> Trajectory:
+    """select_action(obs, key) -> action. Scans ``env.max_steps``."""
+    k_reset, k_steps = jax.random.split(key)
+    s0 = env.reset(k_reset)
+
+    def body(carry, k):
+        s = carry
+        o = env.obs(s)
+        live = jnp.logical_not(s.done)
+        a = select_action(o, k)
+        ns, no, r, d = env.step(s, a)
+        step = (o, a, r, no, d, live.astype(jnp.float32))
+        return ns, step
+
+    keys = jax.random.split(k_steps, env.max_steps)
+    _, (obs, actions, rewards, next_obs, dones, mask) = jax.lax.scan(
+        body, s0, keys)
+    return Trajectory(obs, actions, rewards * mask, next_obs, dones,
+                      mask)
+
+
+def episode_return(traj: Trajectory) -> jnp.ndarray:
+    return jnp.sum(traj.rewards)

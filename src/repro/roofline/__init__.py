@@ -1,0 +1,11 @@
+"""Roofline analysis: v5e constants, HLO collective parsing, the
+three-term model (compute / memory / collective)."""
+from repro.roofline import constants  # noqa: F401
+from repro.roofline.hlo import collective_bytes, count_ops  # noqa: F401
+from repro.roofline.report import (  # noqa: F401
+    Roofline,
+    active_param_count,
+    analyze,
+    model_flops,
+    param_count,
+)

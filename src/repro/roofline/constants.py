@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (per chip) — the dry-run target."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per ICI link
+VMEM_BYTES = 128 * 2 ** 20      # ~128 MiB vector memory (v5e)

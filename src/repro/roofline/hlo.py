@@ -1,0 +1,89 @@
+"""HLO text parsing: per-collective byte counts.
+
+``compiled.cost_analysis()`` has no collective-traffic entry, so we
+parse the compiled HLO module text and sum the operand sizes of every
+
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (+ their -start async forms)
+
+op. Post-optimisation HLO does not print operand types inline, so the
+parse is two-pass: (1) map every instruction name to its result byte
+size, (2) for each collective, sum the sizes of its named operands.
+
+NOTE: scan-generated ``while`` loops would be counted once, not
+trip-count times — the dry-run therefore lowers with
+``ArchConfig.unroll_layers=True`` so every layer's collectives (and
+FLOPs) appear explicitly in the module.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+# instruction definition:  %name = <result types> opcode(...).
+# Result tuples may contain /*index=N*/ comments (with '='), so the
+# result-type capture is a lazy any-char match bounded to the line.
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s"
+                  r"([\w\-]+)\(", re.M)
+
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(result_types: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(result_types))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind over the whole module
+    (one execution). ``-done`` ops are skipped (their operand is the
+    async handle — counting both would double-count)."""
+    sizes: Dict[str, int] = {}
+    instrs = []
+    for m in _DEF.finditer(hlo_text):
+        name, rtypes, opcode = m.group(1), m.group(2), m.group(3)
+        sizes[name] = _result_bytes(rtypes)
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        if base is not None:
+            # operand list: up to the matching close paren of this line
+            line_end = hlo_text.find("\n", m.end())
+            args = hlo_text[m.end():line_end]
+            args = args.split("),")[0]
+            instrs.append((base, _OPERAND.findall(args)))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for kind, operands in instrs:
+        nbytes = sum(sizes.get(o, 0) for o in operands)
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}\b", hlo_text))

@@ -1,0 +1,133 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs   / (chips × peak FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM bandwidth)
+    collective = coll_bytes  / (chips × ICI link bandwidth)
+
+plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs. HLO_FLOPs/bytes come from
+``compiled.cost_analysis()`` (whole-program, i.e. summed over devices
+for SPMD — we treat them as global and divide by chip count);
+collective bytes from the HLO parse (repro.roofline.hlo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, MoEConfig, ShapeConfig
+from repro.roofline import constants as C
+from repro.roofline.hlo import collective_bytes
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    bytes_per_device: Optional[float] = None   # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * C.PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * C.HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * C.ICI_BW_PER_LINK)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+# ----------------------------------------------------------------------
+def param_count(cfg: ArchConfig) -> int:
+    """Total parameter count N (exact, from the param pytree)."""
+    import jax
+    from repro.models import param_specs
+    tree = param_specs(cfg)
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts
+    instead of all experts)."""
+    import jax
+    from repro.models import param_specs
+    tree = param_specs(cfg)
+    if cfg.moe is None:
+        return sum(int(x.size) for x in jax.tree.leaves(tree))
+    moe: MoEConfig = cfg.moe
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = [getattr(p, "key", None) for p in path]
+        if "experts" in keys:
+            # leading axis is the expert count
+            per_expert = int(leaf.size) // moe.n_experts
+            total += per_expert * moe.top_k
+        else:
+            total += int(leaf.size)
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig,
+                n_agents: int = 1) -> float:
+    """6·N·D  (N = active params, D = tokens in the step)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * n_agents
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    tokens = shape.global_batch          # decode: 1 token per slot
+    return 2.0 * n * tokens
+
+
+def analyze(arch: str, shape: ShapeConfig, mesh_name: str, chips: int,
+            cost: dict, coll, mflops: float,
+            bytes_per_device: Optional[float] = None) -> Roofline:
+    """``coll``: either raw HLO text (parsed here) or a precomputed
+    {kind: bytes, "total": bytes} dict (e.g. depth-extrapolated)."""
+    if isinstance(coll, str):
+        coll = collective_bytes(coll)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll["total"]),
+        coll_breakdown={k: v for k, v in coll.items() if k != "total"},
+        model_flops=mflops,
+        bytes_per_device=bytes_per_device,
+    )

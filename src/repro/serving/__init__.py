@@ -1,0 +1,9 @@
+"""Serving: batched prefill + decode over functional KV/SSM caches,
+plus vLLM-style continuous batching (repro.serving.continuous)."""
+from repro.serving.continuous import ContinuousBatcher  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DecodeState,
+    ServeConfig,
+    ServeEngine,
+    serve_batches,
+)

@@ -1,0 +1,188 @@
+"""Continuous batching: a fixed-slot decode batch whose finished slots
+are refilled from a request queue without stopping the other slots —
+the vLLM-style serving loop, on top of the functional caches.
+
+Static shapes throughout (one compile per engine): prompts prefill at
+B=1 into a slot-shaped cache, the result is spliced into the batch
+cache at the freed slot index, and a single jitted decode step advances
+every live slot each iteration.
+
+Per-leaf batch dims differ across cache families (transformer caches
+are (L, B, ...), zamba2's mamba states (nb, mpb, B, ...)) — they are
+discovered once by diffing ``eval_shape`` at two batch sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import get_model
+from repro.serving.engine import ServeConfig, _decode_batch, _last_logits
+
+
+def _batch_dims(cfg: ArchConfig, max_len: int) -> Any:
+    """Pytree (matching the cache) of each leaf's batch-dim index."""
+    model = get_model(cfg)
+    s1 = jax.eval_shape(lambda: model.make_cache(cfg, 1, max_len))
+    s2 = jax.eval_shape(lambda: model.make_cache(cfg, 2, max_len))
+
+    def dim(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch dim in {a.shape}")
+
+    return jax.tree.map(dim, s1, s2)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: Optional[int] = None
+    tokens: Optional[list] = None          # generated so far
+    done: bool = True
+
+
+class ContinuousBatcher:
+    """Serve a request stream through ``batch_size`` persistent slots.
+
+    engine-level API:
+        batcher = ContinuousBatcher(cfg, params, serve, batch_size=4)
+        results = batcher.run(requests)     # {req_id: [tokens...]}
+    """
+
+    def __init__(self, cfg: ArchConfig, params, serve: ServeConfig,
+                 batch_size: int, prompt_pad: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.B = batch_size
+        self.prompt_pad = prompt_pad
+        self.model = get_model(cfg)
+        self._bdims = _batch_dims(cfg, serve.max_len)
+        self._prefill1 = jax.jit(self._prefill1_impl)
+        self._decode = jax.jit(self._decode_impl)
+        self._splice = jax.jit(self._splice_impl,
+                               static_argnames=("slot",))
+
+    # -- jitted pieces ---------------------------------------------------
+    def _prefill1_impl(self, params, tokens, length):
+        """B=1 prefill into a fresh 1-slot cache → (next_logits, cache)."""
+        cfg = self.cfg
+        P = tokens.shape[1]
+        pos = jnp.arange(P, dtype=jnp.int32)[None]
+        cache = self.model.make_cache(cfg, 1, self.serve.max_len)
+        if cfg.family == "audio":
+            batch = {"tokens": jnp.broadcast_to(
+                        tokens[:, None, :], (1, cfg.n_codebooks, P)),
+                     "positions": pos,
+                     "cond": jnp.zeros((1, cfg.cond_len, cfg.d_model),
+                                       cfg.dtype("compute"))}
+        elif cfg.family == "vlm":
+            batch = {"tokens": tokens,
+                     "vision": jnp.zeros((1, cfg.vision_prefix,
+                                          cfg.d_model),
+                                         cfg.dtype("compute")),
+                     "positions": jnp.broadcast_to(
+                         jnp.arange(P + cfg.vision_prefix,
+                                    dtype=jnp.int32),
+                         (1, 3, P + cfg.vision_prefix))}
+        else:
+            batch = {"tokens": tokens, "positions": pos}
+        logits, cache = self.model.forward(cfg, params, batch, cache)
+        idx = jnp.maximum(length - 1, 0)
+        nxt = (logits[0, 0, idx] if cfg.family == "audio"
+               else logits[0, idx])
+        return nxt, cache
+
+    def _splice_impl(self, batch_cache, one_cache, slot: int):
+        """Insert a B=1 cache into batch slot ``slot``."""
+        def put(buf, one, d):
+            idx = [slice(None)] * buf.ndim
+            idx[d] = slot
+            one_idx = [slice(None)] * one.ndim
+            one_idx[d] = 0
+            return buf.at[tuple(idx)].set(one[tuple(one_idx)])
+
+        return jax.tree.map(put, batch_cache, one_cache, self._bdims)
+
+    def _decode_impl(self, params, cache, tokens, pos, done, key):
+        batch = _decode_batch(self.cfg, tokens, pos[:, None])
+        logits, cache = self.model.decode(self.cfg, params, batch,
+                                          cache)
+        nl = _last_logits(self.cfg, logits)
+        if self.serve.temperature <= 0.0:
+            nxt = jnp.argmax(nl, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, nl / self.serve.temperature).astype(jnp.int32)
+        nxt = jnp.where(done, tokens[:, 0], nxt)
+        return cache, nxt
+
+    # -- host loop --------------------------------------------------------
+    def run(self, requests: Sequence[Sequence[int]],
+            key=None) -> Dict[int, List[int]]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        queue = list(enumerate(requests))
+        slots = [_Slot() for _ in range(self.B)]
+        cache = self.model.make_cache(self.cfg, self.B,
+                                      self.serve.max_len)
+        tokens = jnp.zeros((self.B, 1), jnp.int32)
+        pos = jnp.zeros((self.B,), jnp.int32)
+        done = jnp.ones((self.B,), bool)
+        results: Dict[int, List[int]] = {}
+
+        def pad_to(r):
+            p = self.prompt_pad
+            while p < len(r):
+                p *= 2
+            return p
+
+        step = 0
+        while queue or any(not s.done for s in slots):
+            # refill finished slots
+            for i, s in enumerate(slots):
+                if s.done and queue:
+                    rid, req = queue.pop(0)
+                    P = pad_to(req)
+                    toks = np.zeros((1, P), np.int32)
+                    toks[0, :len(req)] = req
+                    key, k = jax.random.split(key)
+                    nl, one = self._prefill1(
+                        self.params, jnp.asarray(toks),
+                        jnp.int32(len(req)))
+                    first = (int(jnp.argmax(nl))
+                             if self.serve.temperature <= 0 else
+                             int(jax.random.categorical(
+                                 k, nl / self.serve.temperature)))
+                    cache = self._splice(cache, one, slot=i)
+                    tokens = tokens.at[i, 0].set(first)
+                    pos = pos.at[i].set(len(req))
+                    done = done.at[i].set(False)
+                    slots[i] = _Slot(request_id=rid, tokens=[first],
+                                     done=False)
+
+            # one decode step for every live slot
+            key, k = jax.random.split(key)
+            cache, nxt = self._decode(self.params, cache, tokens, pos,
+                                      done, k)
+            tokens = nxt[:, None]
+            pos = pos + 1
+            for i, s in enumerate(slots):
+                if s.done:
+                    continue
+                t = int(nxt[i])
+                s.tokens.append(t)
+                hit_eos = t == self.serve.eos_id
+                full = len(s.tokens) >= self.serve.max_new_tokens
+                out_of_cache = int(pos[i]) >= self.serve.max_len - 1
+                if hit_eos or full or out_of_cache:
+                    results[s.request_id] = s.tokens
+                    s.done = True
+                    done = done.at[i].set(True)
+            step += 1
+        return results

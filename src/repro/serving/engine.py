@@ -1,0 +1,163 @@
+"""Batched serving engine: prefill + token-by-token decode over the
+model zoo's functional KV caches (full / sliding-window ring / MLA
+latent / SSM state — whichever ``model.make_cache`` builds for the
+arch).
+
+The decode loop is a single jitted ``lax.scan`` over new tokens with
+per-slot done masking; the host-side ``serve_batches`` helper packs a
+request list into fixed-size batches (static shapes → one compilation).
+Decode-shape dry-runs lower exactly ``decode_step`` (one token + cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512           # cache capacity
+    max_new_tokens: int = 64
+    temperature: float = 0.0     # 0 → greedy
+    eos_id: int = -1             # -1 → never stops early
+
+
+class DecodeState(NamedTuple):
+    cache: Any
+    tokens: jnp.ndarray          # (B, 1) last emitted token
+    pos: jnp.ndarray             # (B,) next absolute position
+    done: jnp.ndarray            # (B,) bool
+
+
+def _decode_batch(cfg: ArchConfig, tokens, positions):
+    """Wrap a (B, 1) token into the arch's decode-batch dict."""
+    if cfg.family == "audio":
+        t = jnp.broadcast_to(tokens[:, None, :],
+                             (tokens.shape[0], cfg.n_codebooks, 1))
+        return {"tokens": t, "positions": positions}
+    if cfg.family == "vlm":
+        pos3 = jnp.broadcast_to(positions[:, None, :],
+                                (positions.shape[0], 3, 1))
+        return {"tokens": tokens, "positions": pos3}
+    return {"tokens": tokens, "positions": positions}
+
+
+def _last_logits(cfg: ArchConfig, logits):
+    """(B, V) next-token logits from a decode/prefill output."""
+    if cfg.family == "audio":                  # (B, C, T, V): codebook 0
+        return logits[:, 0, -1, :]
+    return logits[:, -1, :]
+
+
+class ServeEngine:
+    """One arch, one batch size, one cache capacity → compiled once."""
+
+    def __init__(self, cfg: ArchConfig, params, serve: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.model = get_model(cfg)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._generate = jax.jit(self._generate_impl)
+
+    # -- prefill -------------------------------------------------------
+    def _prefill_impl(self, params, tokens, lengths):
+        """tokens: (B, P) prompt ids (right-padded); lengths: (B,)."""
+        B, P = tokens.shape
+        cfg = self.cfg
+        pos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+        cache = self.model.make_cache(cfg, B, self.serve.max_len)
+        if cfg.family == "audio":
+            batch = {"tokens": jnp.broadcast_to(
+                        tokens[:, None, :], (B, cfg.n_codebooks, P)),
+                     "positions": pos,
+                     "cond": jnp.zeros((B, cfg.cond_len, cfg.d_model),
+                                       cfg.dtype("compute"))}
+        elif cfg.family == "vlm":
+            batch = {"tokens": tokens,
+                     "vision": jnp.zeros((B, cfg.vision_prefix,
+                                          cfg.d_model),
+                                         cfg.dtype("compute")),
+                     "positions": jnp.broadcast_to(
+                         jnp.arange(P + cfg.vision_prefix,
+                                    dtype=jnp.int32),
+                         (B, 3, P + cfg.vision_prefix))}
+        else:
+            batch = {"tokens": tokens, "positions": pos}
+        logits, cache = self.model.forward(cfg, params, batch, cache)
+        # next-token logits come from each prompt's LAST real token
+        idx = jnp.maximum(lengths - 1, 0)
+        if cfg.family == "audio":
+            nxt = logits[jnp.arange(B), 0, idx, :]
+        else:
+            nxt = logits[jnp.arange(B), idx, :]
+        return nxt, cache
+
+    # -- decode loop ---------------------------------------------------
+    def _sample(self, logits, key):
+        if self.serve.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve.temperature).astype(jnp.int32)
+
+    def _generate_impl(self, params, tokens, lengths, key):
+        cfg, serve = self.cfg, self.serve
+        B = tokens.shape[0]
+        first_logits, cache = self._prefill_impl(params, tokens, lengths)
+        k0, key = jax.random.split(key)
+        tok0 = self._sample(first_logits, k0)
+        state = DecodeState(
+            cache=cache,
+            tokens=tok0[:, None],
+            pos=lengths.astype(jnp.int32),
+            done=tok0 == serve.eos_id,
+        )
+
+        def step(st: DecodeState, k):
+            batch = _decode_batch(cfg, st.tokens, st.pos[:, None])
+            logits, cache = self.model.decode(cfg, params, batch,
+                                              st.cache)
+            nxt = self._sample(_last_logits(cfg, logits), k)
+            nxt = jnp.where(st.done, st.tokens[:, 0], nxt)
+            done = st.done | (nxt == serve.eos_id)
+            new = DecodeState(cache=cache, tokens=nxt[:, None],
+                              pos=st.pos + 1, done=done)
+            return new, nxt
+
+        keys = jax.random.split(key, serve.max_new_tokens - 1)
+        state, rest = jax.lax.scan(step, state, keys)
+        out = jnp.concatenate([tok0[:, None], rest.T], axis=1)
+        return out                                  # (B, max_new_tokens)
+
+    # -- public --------------------------------------------------------
+    def generate(self, prompts: jnp.ndarray, lengths: jnp.ndarray,
+                 key=None) -> jnp.ndarray:
+        """prompts: (B, P) right-padded int32; lengths: (B,)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return self._generate(self.params, prompts, lengths, key)
+
+
+def serve_batches(requests: Sequence[Sequence[int]], batch_size: int,
+                  pad_id: int = 0) -> List[Tuple[Any, Any]]:
+    """Pack a request list into fixed-(B, P) numpy batches (static
+    shapes → single compilation); returns [(tokens, lengths), ...]."""
+    import numpy as np
+    out = []
+    for i in range(0, len(requests), batch_size):
+        chunk = list(requests[i:i + batch_size])
+        while len(chunk) < batch_size:          # pad the tail batch
+            chunk.append([pad_id])
+        P = max(len(r) for r in chunk)
+        toks = np.full((batch_size, P), pad_id, np.int32)
+        lens = np.zeros((batch_size,), np.int32)
+        for j, r in enumerate(chunk):
+            toks[j, :len(r)] = r
+            lens[j] = len(r)
+        out.append((jnp.asarray(toks), jnp.asarray(lens)))
+    return out

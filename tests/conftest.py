@@ -1,0 +1,4 @@
+import jax
+
+# CPU tests run in fp32 (reduced configs set this too); keep x64 off.
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED variant (≤2 layers,
+d_model ≤ 512, ≤4 experts) and runs a real forward + one train step on
+CPU, asserting output shapes and the absence of NaNs. Decode paths are
+exercised through a prefill → decode roundtrip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_arch_config
+from repro.configs.base import GroupSpec, ShapeConfig
+from repro.core import init_train_state, make_group_train_step
+from repro.data import StreamSpec, make_agent_batch, make_group_batch
+from repro.models import get_model, make_batch
+
+SHAPE = ShapeConfig("smoke", 64, 2, "train")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def _reduced(arch_id):
+    cfg = get_arch_config(arch_id).reduced()
+    assert cfg.n_layers <= 3 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    return cfg
+
+
+def test_forward_shapes_and_no_nans(arch):
+    cfg = _reduced(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+    batch = make_batch(cfg, SHAPE, key)
+    logits, _ = model.forward(cfg, params, batch, None)
+    B, S, V = 2, SHAPE.seq_len, cfg.vocab_size
+    if cfg.family == "audio":
+        assert logits.shape == (B, cfg.n_codebooks, S, V)
+    else:
+        assert logits.shape == (B, S, V)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_train_step_loss_and_no_nans(arch):
+    cfg = _reduced(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+    batch = make_batch(cfg, SHAPE, key)
+    loss = model.loss(cfg, params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # one real gradient step reduces nothing catastrophically
+    grads = jax.grad(lambda p: model.loss(cfg, p, batch))(params)
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+
+
+def test_group_train_step(arch):
+    """Two-agent DDAL step over the sharded (streaming) trainer."""
+    cfg = _reduced(arch)
+    spec = GroupSpec(n_agents=2, threshold=1, minibatch=2,
+                     knowledge_mode="streaming")
+    opt = optim.adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, spec, opt, key)
+    step = jax.jit(make_group_train_step(cfg, spec, opt))
+    batch = make_group_batch(cfg, SHAPE, StreamSpec(), 2, 0)
+    for i in range(4):
+        state, m = step(state, batch)
+        assert np.isfinite(np.asarray(m["loss"])).all()
+    assert int(state.step) == 4
+
+
+def test_prefill_decode_roundtrip(arch):
+    cfg = _reduced(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+    B, P = 2, 16
+    cache = model.make_cache(cfg, B, 64)
+    pbatch = make_batch(cfg, ShapeConfig("p", P, B, "prefill"), key)
+    logits, cache = model.forward(cfg, params, pbatch, cache)
+    assert np.isfinite(np.asarray(logits)).all()
+    dbatch = make_batch(cfg, ShapeConfig("d", P, B, "decode"), key)
+    # decode positions continue after the prefix
+    if cfg.family == "vlm":
+        dbatch["positions"] = jnp.full((B, 3, 1), P, jnp.int32)
+    else:
+        dbatch["positions"] = jnp.full((B, 1), P, jnp.int32)
+    dlogits, cache2 = model.decode(cfg, params, dbatch, cache)
+    v = cfg.vocab_size
+    if cfg.family == "audio":
+        assert dlogits.shape == (B, cfg.n_codebooks, 1, v)
+    else:
+        assert dlogits.shape == (B, 1, v)
+    assert np.isfinite(np.asarray(dlogits)).all()
+
+
+def test_mla_absorption_equivalence():
+    """DeepSeek MLA decode with weight absorption (score against the
+    rank-r latent) must equal the expanded-K/V reference (§Perf it.6)."""
+    cfg = get_arch_config("deepseek-v2-lite-16b").reduced()
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+    B = 2
+    cache = model.make_cache(cfg, B, 64)
+    pb = make_batch(cfg, ShapeConfig("p", 16, B, "prefill"), key)
+    _, cache = model.forward(cfg, params, pb, cache)
+    db = {"tokens": jnp.asarray([[5], [9]], jnp.int32),
+          "positions": jnp.full((B, 1), 16, jnp.int32)}
+    l_abs, _ = model.decode(cfg.with_(mla_absorb=True), params, db,
+                            cache)
+    l_ref, _ = model.decode(cfg.with_(mla_absorb=False), params, db,
+                            cache)
+    np.testing.assert_allclose(np.asarray(l_abs), np.asarray(l_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_full_forward(arch):
+    """Teacher-forced decode must reproduce the full-sequence logits
+    (the serving path computes the same function as training)."""
+    cfg = _reduced(arch)
+    if cfg.family in ("audio",):
+        pytest.skip("audio decode interleaves codebooks — covered by "
+                    "shape test")
+    if cfg.moe is not None:
+        # capacity-based routing drops tokens differently at S=8 vs
+        # S=1 (a property of capacity dispatch, not a bug); use a
+        # no-drop capacity for the equivalence check.
+        import dataclasses
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts + 1)))
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+    B = 1
+    S = 8 + (cfg.vision_prefix if cfg.family == "vlm" else 0)
+    fbatch = make_batch(cfg, ShapeConfig("f", S, B, "train"), key)
+    full_logits, _ = model.forward(cfg, params, fbatch, None)
+
+    cache = model.make_cache(cfg, B, 32)
+    toks = fbatch["tokens"]
+    step_logits = []
+    for t in range(S):
+        if cfg.family == "vlm":
+            if t < cfg.vision_prefix:
+                continue
+            db = {"tokens": toks[:, t - cfg.vision_prefix:
+                                 t - cfg.vision_prefix + 1],
+                  "positions": jnp.full((B, 3, 1), t, jnp.int32)}
+            if t == cfg.vision_prefix:
+                # prefill the vision prefix first
+                pb = {"tokens": toks[:, :0],
+                      "vision": fbatch["vision"],
+                      "positions": jnp.broadcast_to(
+                          jnp.arange(cfg.vision_prefix, dtype=jnp.int32),
+                          (B, 3, cfg.vision_prefix))}
+                _, cache = model.forward(cfg, params, pb, cache)
+        else:
+            db = {"tokens": toks[:, t:t + 1],
+                  "positions": jnp.full((B, 1), t, jnp.int32)}
+        lg, cache = model.decode(cfg, params, db, cache)
+        step_logits.append(lg[:, 0])
+    got = jnp.stack(step_logits, axis=1)
+    want = full_logits if cfg.family != "vlm" else \
+        full_logits[:, cfg.vision_prefix:]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,299 @@
+"""Unit + property tests for the paper's core contribution: eq. 4
+weighting, knowledge stores / delay lines, the DDAL loop semantics
+(warm-up, cadence, asynchrony) and the DP-equivalence theorem of
+DESIGN.md §3."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common.pytree import tree_map, tree_weighted_sum
+from repro.configs.base import GroupSpec
+from repro.core import DDAL, knowledge as K
+from repro.core.weighting import (eq4_weights, relevance_matrix,
+                                  training_experience)
+
+# ----------------------------------------------------------------------
+# eq. 4 weighting — properties
+# ----------------------------------------------------------------------
+pos_floats = st.floats(min_value=1e-3, max_value=1e3,
+                       allow_nan=False, allow_infinity=False)
+
+
+@given(st.lists(st.tuples(pos_floats, pos_floats), min_size=1,
+                max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_eq4_weights_are_convex(tr):
+    """w_j = ½(T̂_j + R̂_j) ≥ 0 and Σw = 1 (a convex combination)."""
+    T = jnp.asarray([t for t, _ in tr])
+    R = jnp.asarray([r for _, r in tr])
+    w = eq4_weights(T, R)
+    assert np.all(np.asarray(w) >= 0)
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-5)
+
+
+@given(st.lists(pos_floats, min_size=2, max_size=12), pos_floats)
+@settings(max_examples=50, deadline=None)
+def test_eq4_scale_invariance(ts, scale):
+    """Scaling all T (or all R) leaves the weights unchanged — only
+    relative experience/relevance matters."""
+    T = jnp.asarray(ts)
+    R = jnp.ones_like(T)
+    w1 = eq4_weights(T, R)
+    w2 = eq4_weights(T * scale, R)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(2, 10))
+@settings(max_examples=20, deadline=None)
+def test_eq4_uniform_reduces_to_mean(m):
+    """Uniform T and R ⇒ plain average (the DP limit)."""
+    T = jnp.ones((m,))
+    w = eq4_weights(T, T)
+    np.testing.assert_allclose(np.asarray(w), np.full(m, 1.0 / m),
+                               rtol=1e-6)
+
+
+def test_eq4_monotone_in_T():
+    """More training experience ⇒ no smaller weight."""
+    T = jnp.asarray([1.0, 2.0, 8.0])
+    R = jnp.ones((3,))
+    w = np.asarray(eq4_weights(T, R))
+    assert w[0] < w[1] < w[2]
+
+
+def test_eq4_invalid_pieces_get_zero():
+    T = jnp.asarray([5.0, 3.0, 7.0])
+    R = jnp.ones((3,))
+    valid = jnp.asarray([True, False, True])
+    w = np.asarray(eq4_weights(T, R, valid))
+    assert w[1] == 0.0
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+@given(st.integers(1, 8), st.integers(3, 30))
+@settings(max_examples=20, deadline=None)
+def test_weighted_sum_matches_manual(m, n):
+    key = jax.random.PRNGKey(m * 100 + n)
+    G = jax.random.normal(key, (m, n))
+    T = jax.random.uniform(jax.random.fold_in(key, 1), (m,)) + 0.1
+    R = jax.random.uniform(jax.random.fold_in(key, 2), (m,)) + 0.1
+    w = eq4_weights(T, R)
+    got = tree_weighted_sum({"g": G}, w)["g"]
+    Th = T / T.sum()
+    Rh = R / R.sum()
+    want = 0.5 * (jnp.einsum("m,mn->n", Th, G)
+                  + jnp.einsum("m,mn->n", Rh, G))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_training_experience_modes():
+    assert float(training_experience(9, "epochs")) == 9.0
+    assert float(training_experience(9, "sqrt")) == 3.0
+    assert float(training_experience(9, "uniform")) == 1.0
+    assert float(training_experience(0, "epochs")) == 1.0  # floor
+
+
+def test_relevance_matrix_topologies():
+    Rf = relevance_matrix(4, "uniform")
+    assert np.all(np.asarray(Rf) == 1.0)
+    Rr = np.asarray(relevance_matrix(5, "ring"))
+    # each agent reaches itself and its two ring neighbours only
+    assert Rr.sum() == 5 * 3
+    assert np.all(np.diag(Rr) == 1.0)
+
+
+# ----------------------------------------------------------------------
+# knowledge store (ring buffer) semantics
+# ----------------------------------------------------------------------
+def _store(m):
+    return K.make_store({"g": jnp.zeros((3,))}, m)
+
+
+def test_store_append_and_average():
+    st_ = _store(4)
+    for i in range(3):
+        st_ = K.append(st_, {"g": jnp.full((3,), float(i + 1))},
+                       T=float(i + 1), R=1.0)
+    g, wsum = K.weighted_average(st_)
+    # T weights 1,2,3 → T̂=(1/6,2/6,3/6); R uniform → R̂=1/3 each
+    w = 0.5 * (jnp.asarray([1, 2, 3]) / 6.0 + 1.0 / 3.0)
+    want = float(jnp.sum(w * jnp.asarray([1.0, 2.0, 3.0])))
+    np.testing.assert_allclose(np.asarray(g["g"]), np.full(3, want),
+                               rtol=1e-6)
+    assert float(wsum) > 0
+
+
+def test_store_ring_overwrite():
+    """m+1 appends overwrite the oldest piece (K_i holds last m)."""
+    st_ = _store(2)
+    for i in range(3):
+        st_ = K.append(st_, {"g": jnp.full((3,), float(i))},
+                       T=1.0, R=1.0)
+    g, _ = K.weighted_average(st_)
+    # slots now hold pieces 1 and 2 → mean = 1.5
+    np.testing.assert_allclose(np.asarray(g["g"]), np.full(3, 1.5),
+                               rtol=1e-6)
+
+
+def test_store_disabled_append_is_noop():
+    st_ = _store(2)
+    st2 = K.append(st_, {"g": jnp.ones((3,))}, T=1.0, R=1.0,
+                   enabled=False)
+    assert int(st2.ptr) == 0
+    assert not bool(st2.valid.any())
+
+
+def test_empty_store_average_is_zero():
+    g, wsum = K.weighted_average(_store(3))
+    np.testing.assert_array_equal(np.asarray(g["g"]), np.zeros(3))
+    assert float(wsum) == 0.0
+
+
+# ----------------------------------------------------------------------
+# DDAL loop semantics on a toy quadratic "agent"
+# ----------------------------------------------------------------------
+def _toy_ddal(spec, delay=None):
+    """Agent state = scalar params θ; 'gradient' = θ - agent_id (each
+    agent pulls toward its own target id), lr = 1."""
+    def gen_grads(state, key):
+        del key
+        g = {"w": state["w"] - state["target"]}
+        return g, {"w": state["w"]}, state
+
+    def apply_grads(state, g):
+        return {"w": state["w"] - 0.5 * g["w"],
+                "target": state["target"]}
+
+    def params_of(state):
+        return {"w": state["w"]}
+
+    return DDAL(spec, gen_grads, apply_grads, params_of, delay=delay)
+
+
+def _toy_states(n):
+    return {"w": jnp.zeros((n,)),
+            "target": jnp.arange(n, dtype=jnp.float32)}
+
+
+def test_ddal_warmup_is_independent():
+    """Before the threshold no knowledge flows: each agent optimises
+    its own objective exactly as a lone learner."""
+    spec = GroupSpec(n_agents=3, threshold=100, minibatch=1, m_pieces=4)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(3))
+    gs, _ = jax.jit(lambda g, k: ddal.run(g, k, 10))(
+        gs, jax.random.PRNGKey(0))
+    w = np.asarray(gs.agent_states["w"])
+    expect = np.arange(3) * (1 - 0.5 ** 10)
+    np.testing.assert_allclose(w, expect, rtol=1e-5)
+    assert not bool(np.asarray(gs.stores.valid).any())
+
+
+def test_ddal_sharing_mixes_knowledge():
+    """After the threshold, agents' updates blend others' gradients —
+    with symmetric targets the group average pulls everyone together."""
+    spec = GroupSpec(n_agents=2, threshold=0, minibatch=1, m_pieces=4)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(2))
+    gs, _ = jax.jit(lambda g, k: ddal.run(g, k, 30))(
+        gs, jax.random.PRNGKey(0))
+    w = np.asarray(gs.agent_states["w"])
+    # both agents see the same averaged gradient ⇒ identical params,
+    # converging to the average target 0.5
+    np.testing.assert_allclose(w[0], w[1], rtol=1e-5)
+    np.testing.assert_allclose(w, [0.5, 0.5], atol=1e-2)
+
+
+def test_ddal_minibatch_cadence():
+    """Group updates happen only every ``minibatch`` epochs (line 11)."""
+    spec = GroupSpec(n_agents=2, threshold=0, minibatch=5, m_pieces=8)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(2))
+    traj = []
+    step = jax.jit(ddal.epoch_step)
+    for e in range(11):
+        keys = jax.random.split(jax.random.PRNGKey(e), 2)
+        gs, m = step(gs, keys)
+        traj.append(np.asarray(m["w"]))
+    traj = np.stack(traj)             # (11, 2) params BEFORE each epoch
+    # changed[e] ⇔ an update was applied during epoch e; updates land
+    # only at e % 5 == 0
+    changed = np.any(np.diff(traj, axis=0) != 0, axis=1)
+    assert changed[0] and changed[5]
+    assert not np.any(changed[[1, 2, 3, 4, 6, 7, 8, 9]])
+
+
+def test_ddal_delay_defers_knowledge():
+    """A piece sent at epoch t with delay d arrives at t+d — before
+    that the receiving store holds only the sender-free view."""
+    delay = jnp.asarray([[0, 3], [3, 0]], jnp.int32)
+    spec = GroupSpec(n_agents=2, threshold=0, minibatch=1, m_pieces=8)
+    ddal = _toy_ddal(spec, delay=delay)
+    gs = ddal.init(_toy_states(2))
+    step = jax.jit(ddal.epoch_step)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    gs, _ = step(gs, keys)            # epoch 0: own piece arrives now
+    # store 0 has exactly 1 valid piece (its own); the peer's is in
+    # flight for 3 more epochs
+    assert int(gs.stores.valid[0].sum()) == 1
+    for e in range(1, 4):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), 2))
+    # epoch 3 delivered the piece agent 1 sent at epoch 0
+    assert int(gs.stores.valid[0].sum()) >= 2
+
+
+# ----------------------------------------------------------------------
+# DP-equivalence of the pod-scale streaming trainer (DESIGN.md §3)
+# ----------------------------------------------------------------------
+def test_streaming_ddal_equals_data_parallel():
+    """threshold=0, minibatch=1, uniform weights, delay 0 ⇒ the DDAL
+    update IS the plain gradient mean — synchronous data parallelism."""
+    from repro import optim
+    from repro.configs import get_arch_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import init_train_state, make_group_train_step
+    from repro.data import StreamSpec, make_group_batch
+    from repro.models import get_model
+
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    opt = optim.sgd(0.1)
+    shape = ShapeConfig("t", 32, 2, "train")
+    spec = GroupSpec(n_agents=2, threshold=0, minibatch=1,
+                     t_weighting="uniform", r_weighting="uniform",
+                     knowledge_mode="streaming")
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, spec, opt, key)
+    # both agents start from identical params
+    p0 = tree_map(lambda x: x[0], state.params)
+    state = state._replace(
+        params=tree_map(lambda x: jnp.stack([x, x]), p0))
+    batch = make_group_batch(cfg, shape, StreamSpec(), 2, 0)
+
+    step = jax.jit(make_group_train_step(cfg, spec, opt))
+    new_state, metrics = step(state, batch)
+    assert int(metrics["shared"]) == 1
+
+    # manual DP step: mean of the two agents' gradients
+    g0 = jax.grad(lambda p: model.loss(cfg, p, tree_map(
+        lambda x: x[0], batch)))(p0)
+    g1 = jax.grad(lambda p: model.loss(cfg, p, tree_map(
+        lambda x: x[1], batch)))(p0)
+    gmean = tree_map(lambda a, b: 0.5 * (a + b), g0, g1)
+    want, _ = opt.update(gmean, opt.init(p0), p0,
+                         jnp.zeros((), jnp.int32))
+    got = tree_map(lambda x: x[0], new_state.params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5),
+        got, want)
+    # and both agents ended identical
+    jax.tree.map(lambda x: np.testing.assert_allclose(
+        np.asarray(x[0]), np.asarray(x[1]), rtol=1e-6),
+        new_state.params)

@@ -1,0 +1,156 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, executed in interpret mode on CPU (deliverable c)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ----------------------------------------------------------------------
+# ddal_wavg — the paper's eq. 4 contraction
+# ----------------------------------------------------------------------
+from repro.kernels.ddal_wavg import ops as wavg_ops
+from repro.kernels.ddal_wavg import ref as wavg_ref
+
+
+@pytest.mark.parametrize("m,n", [(1, 128), (3, 100), (8, 8192),
+                                 (5, 20_000), (16, 4_097)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wavg_flat(m, n, dtype):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    G = jax.random.normal(key, (m, n), jnp.float32).astype(dtype)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (m,))
+    got = wavg_ops.wavg(G, w, interpret=True)
+    want = wavg_ref.wavg(G, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_wavg_tree():
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (4, 17, 33)),
+            "b": jax.random.normal(key, (4, 12_000)),
+            "c": {"d": jax.random.normal(key, (4, 8))}}
+    w = jax.random.uniform(key, (4,))
+    got = wavg_ops.tree_wavg(tree, w, interpret=True)
+    want = wavg_ref.tree_wavg(tree, w)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5), got, want)
+
+
+def test_wavg_zero_weights():
+    G = jnp.ones((3, 256))
+    w = jnp.zeros((3,))
+    got = wavg_ops.wavg(G, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(256))
+
+
+# ----------------------------------------------------------------------
+# flash_attention
+# ----------------------------------------------------------------------
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+@pytest.mark.parametrize(
+    "B,S,H,K,D,win,blk",
+    [(2, 128, 4, 2, 32, None, 64),
+     (1, 256, 4, 4, 64, None, 128),
+     (2, 96, 8, 2, 32, None, 32),
+     (1, 256, 4, 2, 32, 64, 64),
+     (1, 64, 2, 1, 16, 16, 32),     # MQA + window
+     (2, 80, 4, 4, 32, None, 32)])  # padded seq (80 % 32 != 0)
+def test_flash_attention(B, S, H, K, D, win, blk):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, K, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, K, D), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, window=win, block_q=blk,
+                                 block_k=blk, interpret=True)
+    want = fa_ref.attention(q, k, v, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 128, 4, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(key, (1, 128, 2, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (1, 128, 2, 32)).astype(jnp.bfloat16)
+    got = fa_ops.flash_attention(q, k, v, interpret=True)
+    want = fa_ref.attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------------------
+# ssd_scan — Mamba2 intra-chunk dual form
+# ----------------------------------------------------------------------
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+def _ssd_inputs(key, b, nc, l, h, n, p):
+    ks = jax.random.split(key, 5)
+    xc = jax.random.normal(ks[0], (b, nc, l, h, p), jnp.float32)
+    dtc = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    cs = jnp.cumsum(dtc * A, axis=2)
+    Bc = jax.random.normal(ks[3], (b, nc, l, h, n), jnp.float32)
+    Cc = jax.random.normal(ks[4], (b, nc, l, h, n), jnp.float32)
+    return xc, dtc, cs, Bc, Cc
+
+
+@pytest.mark.parametrize("b,nc,l,h,p,n",
+                         [(2, 2, 32, 3, 16, 16),
+                          (1, 4, 64, 2, 32, 64),
+                          (2, 1, 128, 4, 64, 128)])
+def test_ssd_intra_chunk(b, nc, l, h, p, n):
+    xc, dtc, cs, Bc, Cc = _ssd_inputs(jax.random.PRNGKey(0),
+                                      b, nc, l, h, n, p)
+    got = ssd_ops.ssd_intra_chunk(xc, dtc, cs, Bc, Cc, interpret=True)
+    want = ssd_ref.ssd_intra_chunk(xc, dtc, cs, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_end_to_end():
+    """Full ssd_chunked with the Pallas intra-chunk path == XLA path."""
+    from repro.models.ssd import ssd_chunked
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, n, chunk = 1, 128, 2, 16, 32, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y1, s1 = ssd_chunked(x, dt, A, B, C, chunk, impl="xla")
+    y2, s2 = ssd_chunked(x, dt, A, B, C, chunk,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_model_level_kernel_equivalence():
+    """attention_impl / ssd_impl flags do not change model outputs."""
+    from repro.configs import get_arch_config
+    from repro.configs.base import ShapeConfig
+    from repro.models import get_model, make_batch
+    for arch, flag in [("llama3.2-3b", "attention_impl"),
+                       ("mamba2-780m", "ssd_impl")]:
+        cfg = get_arch_config(arch).reduced()
+        model = get_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(cfg, key)
+        batch = make_batch(cfg, ShapeConfig("t", 64, 2, "train"), key)
+        l1 = model.loss(cfg, params, batch)
+        l2 = model.loss(cfg.with_(**{flag: "pallas_interpret"}),
+                        params, batch)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
