@@ -12,12 +12,9 @@ measured t_collective scaling from the dry-run records if present.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
-import numpy as np
 
 from repro import optim
 from repro.configs import get_arch_config

@@ -9,6 +9,7 @@ correctness check, and CPU wall time of the XLA reference for context.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -18,11 +19,14 @@ import numpy as np
 from repro.kernels.ddal_wavg import ops, ref
 from repro.roofline.constants import HBM_BW
 
+SIZES = [(4, 1_000_000), (8, 10_000_000),
+         (16, 10_000_000), (8, 100_000_000)]
+SMOKE_SIZES = [(4, 1_000_000), (8, 2_000_000)]
 
-def main(verbose: bool = True):
+
+def main(verbose: bool = True, smoke: bool = False):
     rows = []
-    for m, n_params in [(4, 1_000_000), (8, 10_000_000),
-                        (16, 10_000_000), (8, 100_000_000)]:
+    for m, n_params in (SMOKE_SIZES if smoke else SIZES):
         key = jax.random.PRNGKey(0)
         # correctness at a reduced size (same tiling)
         n_small = 262_144
@@ -64,4 +68,8 @@ def main(verbose: bool = True):
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI fast path: reduced sizes only")
+    args = p.parse_args()
+    main(smoke=args.smoke)

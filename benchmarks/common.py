@@ -15,17 +15,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
 from repro.configs.base import GroupSpec
-from repro.core import DDAL
-from repro.rl import (CartPole, DQNConfig, init_a2c, init_dqn,
-                      make_a2c_callbacks, make_dqn_callbacks)
+from repro.rl import CartPole, DQNConfig, make_a2c_group, make_dqn_group
 
 
 @dataclasses.dataclass
@@ -54,17 +50,16 @@ class RunResult:
 def run_a2c_group(n_agents: int, epochs: int, threshold: int,
                   minibatch: int = 100, m_pieces: int = 32,
                   lr: float = 3e-3, seed: int = 0,
-                  max_steps: int = 100) -> RunResult:
+                  max_steps: int = 100, topology: str = "full",
+                  degree: int = 4, topology_seed: int = 0) -> RunResult:
     env = CartPole(max_steps=max_steps)
     opt = optim.adamw(lr)
     spec = GroupSpec(n_agents=n_agents, threshold=threshold,
-                     minibatch=minibatch, m_pieces=m_pieces)
-    gen, app, pof = make_a2c_callbacks(env, opt)
-    ddal = DDAL(spec, gen, app, pof)
+                     minibatch=minibatch, m_pieces=m_pieces,
+                     topology=topology, degree=degree,
+                     topology_seed=topology_seed)
     key = jax.random.PRNGKey(seed)
-    astates = jax.vmap(lambda k: init_a2c(k, env, opt))(
-        jax.random.split(key, n_agents))
-    gs = ddal.init(astates)
+    ddal, gs = make_a2c_group(env, opt, spec, key)
     run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
     t0 = time.time()
     gs, metrics = run(gs, jax.random.fold_in(key, 1))
@@ -76,18 +71,17 @@ def run_a2c_group(n_agents: int, epochs: int, threshold: int,
 def run_dqn_group(n_agents: int, epochs: int, threshold: int,
                   minibatch: int = 200, m_pieces: int = 32,
                   lr: float = 1e-3, seed: int = 0,
-                  max_steps: int = 100) -> RunResult:
+                  max_steps: int = 100, topology: str = "full",
+                  degree: int = 4, topology_seed: int = 0) -> RunResult:
     env = CartPole(max_steps=max_steps)
     opt = optim.adamw(lr)
     cfg = DQNConfig(capacity=10_000, eps_decay=max(500, epochs // 4))
     spec = GroupSpec(n_agents=n_agents, threshold=threshold,
-                     minibatch=minibatch, m_pieces=m_pieces)
-    gen, app, pof = make_dqn_callbacks(env, opt, cfg)
-    ddal = DDAL(spec, gen, app, pof)
+                     minibatch=minibatch, m_pieces=m_pieces,
+                     topology=topology, degree=degree,
+                     topology_seed=topology_seed)
     key = jax.random.PRNGKey(seed)
-    astates = jax.vmap(lambda k: init_dqn(k, env, opt, cfg))(
-        jax.random.split(key, n_agents))
-    gs = ddal.init(astates)
+    ddal, gs = make_dqn_group(env, opt, spec, key, cfg)
     run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
     t0 = time.time()
     gs, metrics = run(gs, jax.random.fold_in(key, 1))

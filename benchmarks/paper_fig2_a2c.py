@@ -10,7 +10,6 @@ Paper claims reproduced here:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import run_a2c_group, sparkline
 

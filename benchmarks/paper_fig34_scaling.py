@@ -8,7 +8,6 @@ majority stays at the optimum).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import run_a2c_group, sparkline
 

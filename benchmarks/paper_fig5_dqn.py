@@ -8,7 +8,6 @@ fewer/smaller fluctuations after the first shared update.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import run_dqn_group, sparkline
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -72,3 +72,15 @@ def shard(x, *names: Optional[str]):
 def named_sharding(mesh, *names: Optional[str]):
     """A NamedSharding for jit in_/out_shardings from logical names."""
     return jax.sharding.NamedSharding(mesh, logical_spec(*names))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` only exists on newer jax; on older releases the
+    Mesh object itself is the context manager. Use as
+    ``with set_mesh(mesh): ...``.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

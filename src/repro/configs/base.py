@@ -8,8 +8,7 @@ required to run a real forward/train step on CPU.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -199,7 +198,11 @@ class GroupSpec:
     knowledge_mode: str = "buffer"   # buffer | streaming (LLM-scale)
     knowledge_dtype: str = "float32" # streaming accumulators (bf16 halves
                                      # the cross-pod exchange traffic)
-    topology: str = "full"       # full | ring
+    # communication graph (repro.core.topology): full | ring | torus2d
+    # | star | random_k | hierarchical
+    topology: str = "full"
+    degree: int = 4              # k for random_k; pod size for hierarchical
+    topology_seed: int = 0       # seed for random_k gossip sampling
     max_delay: int = 0           # async staleness simulation (epochs)
     t_weighting: str = "epochs"  # T_j source
     r_weighting: str = "uniform" # R_j source (paper §6 uses uniform)

@@ -6,7 +6,9 @@ from repro.core.group_mdp import AgentEnv, GroupMDP  # noqa: F401
 from repro.core.knowledge import (  # noqa: F401
     InFlight,
     KnowledgeStore,
+    SparseInFlight,
     make_inflight,
+    make_sparse_inflight,
     make_store,
     weighted_average,
 )
@@ -16,6 +18,17 @@ from repro.core.sharded_ddal import (  # noqa: F401
     init_train_state,
     make_group_train_step,
     train_state_specs,
+)
+from repro.core.topology import (  # noqa: F401
+    TOPOLOGIES,
+    Topology,
+    full,
+    hierarchical,
+    make_topology,
+    random_k,
+    ring,
+    star,
+    torus2d,
 )
 from repro.core.weighting import (  # noqa: F401
     eq4_weights,

@@ -18,8 +18,13 @@ Per epoch (Algorithm 1):
         epochs retrieve m pieces from K_i ∪ K_-i and update with the
         eq. 4 weighted average.
 
-Asynchrony is simulated by the per-edge delay matrix (DESIGN.md §3);
-delay 0 reproduces the paper's same-epoch queue delivery.
+Asynchrony is simulated by per-edge delays (DESIGN.md §3); delay 0
+reproduces the paper's same-epoch queue delivery. Knowledge moves over
+the group's communication graph (``repro.core.topology.Topology``):
+each destination gathers pieces from its in-neighbors through a
+neighbor-indexed ``SparseInFlight`` delay line — O(n·k·D) memory — and
+the dense all-to-all of the seed is recovered exactly by the ``full``
+topology (k = n).
 """
 from __future__ import annotations
 
@@ -31,14 +36,14 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_map
 from repro.configs.base import GroupSpec
 from repro.core import knowledge as K
-from repro.core.weighting import (eq4_weights, relevance_matrix,
-                                  training_experience)
+from repro.core.topology import Topology, make_topology
+from repro.core.weighting import training_experience
 
 
 class GroupState(NamedTuple):
     agent_states: Any          # leaves with leading (n,) agent axis
     stores: K.KnowledgeStore   # leading (n,)
-    flight: K.InFlight
+    flight: K.SparseInFlight
     epoch: jnp.ndarray         # () int32
 
 
@@ -58,20 +63,24 @@ class DDAL:
                  apply_grads: Callable, params_of: Callable,
                  relevance: Optional[jnp.ndarray] = None,
                  delay: Optional[jnp.ndarray] = None,
+                 topology: Optional[Topology] = None,
                  use_wavg_kernel: bool = False):
+        """``topology`` overrides the graph named by ``spec.topology``;
+        ``relevance`` / ``delay`` accept either dense (n, n) src→dst
+        matrices (seed-compatible) or per-edge (n, k) arrays and are
+        attached onto the topology's edge table."""
         self.spec = spec
         self.gen_grads = gen_grads
         self.apply_grads = apply_grads
         self.params_of = params_of       # agent_state -> params pytree
-        n = spec.n_agents
-        self.relevance = (relevance if relevance is not None else
-                          relevance_matrix(n, "ring" if
-                                           spec.topology == "ring"
-                                           else "uniform"))
-        if delay is None:
-            delay = jnp.zeros((n, n), jnp.int32)
-        self.delay = delay
-        self.max_delay = max(int(jnp.max(delay)), spec.max_delay)
+        if topology is None:
+            topology = make_topology(spec)
+        if relevance is not None:
+            topology = topology.with_relevance(relevance)
+        if delay is not None:
+            topology = topology.with_delay(delay)
+        self.topology = topology
+        self.max_delay = max(topology.max_delay, spec.max_delay)
         self.use_wavg_kernel = use_wavg_kernel
 
     # ------------------------------------------------------------------
@@ -82,7 +91,8 @@ class DDAL:
         stores = jax.vmap(lambda _: K.make_store(params0,
                                                  self.spec.m_pieces))(
             jnp.arange(n))
-        flight = K.make_inflight(params0, n, self.max_delay)
+        flight = K.make_sparse_inflight(params0, self.topology,
+                                        self.max_delay)
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
                           epoch=jnp.zeros((), jnp.int32))
@@ -99,27 +109,40 @@ class DDAL:
         warmup = epoch < spec.threshold
         sharing = jnp.logical_not(warmup)
 
-        # --- lines 5–6: independent learning during warm-up -----------
-        updated_local = jax.vmap(self.apply_grads)(astates, grads)
-        astates = _tree_select(
-            jnp.broadcast_to(warmup, (n,)), updated_local, astates)
-
-        # --- lines 8–10: append + asynchronous broadcast ---------------
+        # --- lines 8–10: append + async exchange over the graph -------
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
                              (n,))
-        flight = K.send(gs.flight, grads, T, self.relevance, self.delay,
-                        epoch, sharing)
-        flight, stores = K.deliver(flight, gs.stores, epoch)
+        flight = K.sparse_send(gs.flight, self.topology, grads, T,
+                               epoch, sharing)
+        flight, stores = K.sparse_deliver(flight, gs.stores, epoch,
+                                          self.topology)
 
-        # --- lines 11–14: eq. 4 update every ``minibatch`` epochs ------
+        # --- lines 5–6 / 11–14: one update per epoch ------------------
+        # warm-up: own grads every epoch; sharing: the eq. 4 average
+        # every ``minibatch`` epochs (for agents with ≥1 valid piece).
+        # The branches are mutually exclusive, so a single switch runs
+        # exactly one of them — off-cadence sharing epochs do no
+        # update work at all (the seed computed and discarded both).
         is_update = sharing & (epoch % spec.minibatch == 0)
-        gbar, wsum = jax.vmap(
-            lambda st: K.weighted_average(st, self.use_wavg_kernel))(
-            stores)
-        updated_group = jax.vmap(self.apply_grads)(astates, gbar)
-        # only update agents whose store has at least one valid piece
-        do = jnp.broadcast_to(is_update, (n,)) & (wsum > 0)
-        astates = _tree_select(do, updated_group, astates)
+
+        def hold(states):
+            return states
+
+        def independent(states):
+            return jax.vmap(self.apply_grads)(states, grads)
+
+        def group_update(states):
+            gbar, wsum = jax.vmap(
+                lambda st: K.weighted_average(st, self.use_wavg_kernel))(
+                stores)
+            updated = jax.vmap(self.apply_grads)(states, gbar)
+            # only update agents with ≥1 valid piece in store
+            return _tree_select(wsum > 0, updated, states)
+
+        branch = (warmup.astype(jnp.int32)
+                  + 2 * is_update.astype(jnp.int32))
+        astates = jax.lax.switch(
+            branch, (hold, independent, group_update), astates)
 
         new_gs = GroupState(agent_states=astates, stores=stores,
                             flight=flight, epoch=epoch + 1)

@@ -12,7 +12,7 @@ learning dynamics live in ``repro.core.ddal``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax.numpy as jnp
 

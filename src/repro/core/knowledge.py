@@ -3,10 +3,20 @@
 A ``KnowledgeStore`` is a ring buffer of the last ``m`` gradient pieces
 an agent holds, each with its (T, R) weighting metadata (paper §5:
 every piece travels with its training-experience and relevance
-weights). The paper's multiprocessing queues become delay lines
-(``InFlight``): a piece sent by agent j at epoch t is delivered into
-agent i's store at epoch t + delay[j, i] — deterministic asynchrony
-(DESIGN.md §3).
+weights). The paper's multiprocessing queues become delay lines: a
+piece sent by agent j at epoch t is delivered into agent i's store at
+epoch t + delay[j, i] — deterministic asynchrony (DESIGN.md §3).
+
+Two delay-line layouts exist:
+
+* ``SparseInFlight`` (production) — neighbor-indexed over a
+  ``repro.core.topology.Topology``; leaves are (n, k, D+2, *param)
+  (D+1 delivery planes + 1 scratch), O(n·k·D) memory, send/deliver
+  are gather/scatter over the neighbor table. The ``full`` topology
+  (k = n, slot j ↔ source j) reproduces the dense semantics bitwise.
+* ``InFlight`` (dense reference) — the seed's all-to-all layout with
+  (n_dst, D+1, n_src, *param) leaves, O(n²·D) memory. Kept as the
+  oracle for the dense-vs-sparse equivalence tests.
 
 All structures carry a leading agent axis when used by the vmapped
 group loop in ``repro.core.ddal``.
@@ -17,8 +27,10 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.common.pytree import tree_map, tree_weighted_sum, tree_zeros_like
+from repro.common.pytree import tree_map, tree_weighted_sum
+from repro.core.topology import Topology
 from repro.core.weighting import eq4_weights
 
 
@@ -46,14 +58,19 @@ def append(store: KnowledgeStore, piece, T, R,
            enabled=True) -> KnowledgeStore:
     """Append one piece (overwrites the oldest when full). ``enabled``
     may be a traced bool — when False the store is returned unchanged
-    (used to mask delivery before the sharing threshold)."""
-    slot = store.ptr % store.T.shape[0]
+    (used to mask delivery before the sharing threshold). The write is
+    a one-hot masked select rather than a scatter: XLA CPU lowers it
+    to a fused elementwise op that vectorises under vmap/scan (dynamic
+    scatters there cost ~10× more), and a disabled append is simply an
+    all-False mask."""
+    m = store.T.shape[0]
     en = jnp.asarray(enabled)
+    slot = jnp.where(en, store.ptr % m, m)     # m ⇒ mask is all-False
+    onehot = jnp.arange(m) == slot             # (m,)
 
     def write(buf, x):
-        new = buf.at[slot].set(x.astype(buf.dtype))
-        return jnp.where(en, new, buf) if new.ndim == 0 else \
-            jnp.where(jnp.reshape(en, (1,) * new.ndim), new, buf)
+        mask = jnp.reshape(onehot, (m,) + (1,) * (buf.ndim - 1))
+        return jnp.where(mask, x.astype(buf.dtype), buf)
 
     grads = tree_map(lambda b, x: write(b, x), store.grads, piece)
     return KnowledgeStore(
@@ -67,19 +84,39 @@ def append(store: KnowledgeStore, piece, T, R,
 
 def append_many(store: KnowledgeStore, pieces, T, R,
                 deliver) -> KnowledgeStore:
-    """Append up to n pieces at once (one scan step per piece so ring
-    semantics — oldest first overwritten — are preserved).
+    """Append up to n pieces at once, in one vectorised masked pass.
 
-    pieces: pytree with leading axis n; T, R, deliver: (n,).
+    Ring semantics are exactly those of n sequential ``append`` calls:
+    pieces with ``deliver`` True take consecutive slots from ``ptr``
+    (oldest first overwritten), and when more pieces than slots arrive
+    the later piece wins. pieces: pytree with leading axis n; T, R,
+    deliver: (n,).
     """
+    m = store.T.shape[0]
     n = T.shape[0]
+    v = deliver.astype(jnp.int32)
+    rank = jnp.cumsum(v) - v                       # exclusive rank
+    slot = jnp.where(deliver, (store.ptr + rank) % m, m)   # (n,)
+    # hit[s, j]: piece j lands in slot s; the last such j wins —
+    # exactly the sequential-overwrite order.
+    hit = slot[None, :] == jnp.arange(m)[:, None]          # (m, n)
+    sel = jnp.max(jnp.where(hit, jnp.arange(n)[None, :], -1),
+                  axis=1)                                  # (m,)
+    has = sel >= 0
+    sel_c = jnp.maximum(sel, 0)
 
-    def body(st, idx):
-        piece = tree_map(lambda x: x[idx], pieces)
-        return append(st, piece, T[idx], R[idx], deliver[idx]), None
+    def write(buf, xs):
+        mask = jnp.reshape(has, (m,) + (1,) * (buf.ndim - 1))
+        return jnp.where(mask, xs[sel_c].astype(buf.dtype), buf)
 
-    store, _ = jax.lax.scan(body, store, jnp.arange(n))
-    return store
+    grads = tree_map(lambda b, x: write(b, x), store.grads, pieces)
+    return KnowledgeStore(
+        grads=grads,
+        T=write(store.T, T),
+        R=write(store.R, R),
+        valid=jnp.where(has, True, store.valid),
+        ptr=store.ptr + jnp.sum(v),
+    )
 
 
 def weighted_average(store: KnowledgeStore, use_kernel: bool = False):
@@ -93,6 +130,200 @@ def weighted_average(store: KnowledgeStore, use_kernel: bool = False):
     return g, jnp.sum(w)
 
 
+# ---------------------------------------------------------------------
+# sparse, topology-aware delay line (production path)
+# ---------------------------------------------------------------------
+class SparseInFlight(NamedTuple):
+    """Neighbor-indexed delay line. For destination agent i, edge slot
+    j (< k) carries pieces from source ``topo.nbr[i, j]``; a piece sent
+    at epoch t over an edge with delay d sits in delay slot
+    (t + d) % (D+1) until epoch t + d pops it. The delay axis holds
+    D+2 planes: D+1 delivery slots plus one trailing *scratch* plane
+    that absorbs disabled/warm-up writes, so ``sparse_send`` never has
+    to read-modify-write a live plane to honor the enable gate.
+    Memory is O(n·k·D) versus the dense reference's O(n²·D)."""
+    grads: Any            # leaves (n, k, D+2, *param_shape)
+    T: jnp.ndarray        # (n, k, D+2)
+    R: jnp.ndarray
+    valid: jnp.ndarray    # bool
+
+
+def make_sparse_inflight(params_like, topo: Topology,
+                         max_delay: int) -> SparseInFlight:
+    n, k = topo.nbr.shape
+    planes = max_delay + 2            # D+1 delivery slots + scratch
+    grads = tree_map(
+        lambda x: jnp.zeros((n, k, planes) + x.shape, jnp.float32),
+        params_like)
+    z = jnp.zeros((n, k, planes), jnp.float32)
+    return SparseInFlight(grads=grads, T=z, R=z, valid=z.astype(bool))
+
+
+def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
+                epoch, enabled) -> SparseInFlight:
+    """Every agent publishes its piece; each destination gathers it
+    from its in-neighbors only.
+
+    pieces: pytree leaves (n, ...); T: (n,) training experience of the
+    sources; per-edge relevance/delay come from ``topo``; enabled:
+    scalar bool (sharing started).
+    """
+    n, k, planes = flight.T.shape
+    D1 = planes - 1                    # last plane = disabled scratch
+    src = topo.nbr                                   # (n, k)
+    en = jnp.asarray(enabled)
+    gate = en & topo.mask                            # (n, k)
+    uniform_delay = False
+    concrete = not (isinstance(topo.delay, jax.core.Tracer)
+                    or isinstance(topo.mask, jax.core.Tracer))
+    if concrete:
+        d_np = np.asarray(topo.delay)
+        uniform_delay = bool(d_np.size) and bool(
+            (d_np == d_np.flat[0]).all())
+
+    if uniform_delay:
+        # uniform-delay fast path: every edge targets the same delay
+        # plane, so only that (n, k, 1, ...) slice is touched instead
+        # of a one-hot select over the whole flight.
+        base = (epoch + int(d_np.flat[0])) % D1      # traced scalar
+
+        if bool(np.asarray(topo.mask).all()):
+            # no padded edges: route the whole plane write to the
+            # scratch slot when disabled — a blind write, no
+            # read-modify-write of the live plane and no lax.cond
+            # (which would copy the multi-MB flight through the
+            # branch).
+            slot = jnp.where(en, base, D1)
+
+            def wr(buf, upd):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, upd.astype(buf.dtype), slot, axis=2)
+
+            return SparseInFlight(
+                grads=tree_map(
+                    lambda b, x: wr(b, x[src][:, :, None]),
+                    flight.grads, pieces),
+                T=wr(flight.T, T[src][:, :, None]),
+                R=wr(flight.R, topo.relevance[:, :, None]),
+                valid=wr(flight.valid, jnp.ones((n, k, 1), bool)),
+            )
+
+        # padded edges: gate per-edge with a plane read-select
+        def wr(buf, upd):
+            old = jax.lax.dynamic_slice_in_dim(buf, base, 1, axis=2)
+            g = jnp.reshape(gate[:, :, None],
+                            gate.shape + (1,) * (buf.ndim - 2))
+            new = jnp.where(g, upd.astype(buf.dtype), old)
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, base,
+                                                       axis=2)
+
+        return SparseInFlight(
+            grads=tree_map(lambda b, x: wr(b, x[src][:, :, None]),
+                           flight.grads, pieces),
+            T=wr(flight.T, T[src][:, :, None]),
+            R=wr(flight.R, topo.relevance[:, :, None]),
+            valid=wr(flight.valid, jnp.ones((n, k, 1), bool)),
+        )
+
+    # heterogeneous delays: fold the enable gate AND the topology mask
+    # into the delay-slot one-hot — disabled / masked-out edges select
+    # the scratch plane, so live slots never see their writes. The
+    # write is a masked select, not a scatter — it fuses and
+    # vectorises.
+    slot = jnp.where(gate, (epoch + topo.delay) % D1, D1)    # (n, k)
+    hot = (jnp.arange(planes)[None, None, :]
+           == slot[:, :, None])                    # (n, k, D+2)
+
+    def put(buf, xs):
+        # buf: (n, k, D1, ...); xs: (n, ...) — gather along the table
+        upd = xs[src].astype(buf.dtype)[:, :, None]  # (n, k, 1, ...)
+        mask = jnp.reshape(hot, hot.shape + (1,) * (buf.ndim - 3))
+        return jnp.where(mask, upd, buf)
+
+    grads = tree_map(lambda b, x: put(b, x), flight.grads, pieces)
+    new_T = jnp.where(hot, T[src][:, :, None], flight.T)
+    new_R = jnp.where(hot, topo.relevance[:, :, None], flight.R)
+    new_valid = jnp.where(hot, True, flight.valid)
+    return SparseInFlight(grads=grads, T=new_T, R=new_R,
+                          valid=new_valid)
+
+
+def _regular_exchange(topo: "Topology | None", m: int, k: int) -> bool:
+    """True when the topology makes every delivery a full, aligned
+    k-block: all edges real (no padding mask), one shared delay, and
+    the ring capacity an exact multiple of k. All trace-time facts."""
+    if topo is None or k > m or m % k != 0:
+        return False
+    if isinstance(topo.mask, jax.core.Tracer) or \
+            isinstance(topo.delay, jax.core.Tracer):
+        return False
+    mask = np.asarray(topo.mask)
+    d = np.asarray(topo.delay)
+    return bool(mask.all()) and bool((d == d.flat[0]).all())
+
+
+def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
+                   epoch, topo: "Topology | None" = None
+                   ) -> Tuple[SparseInFlight, KnowledgeStore]:
+    """Pop epoch's arrival slot for every destination and append the
+    valid pieces (k per destination) into the vmapped stores.
+
+    When ``topo`` is given and statically regular (full mask, uniform
+    delay, m % k == 0 — see ``_regular_exchange``), every delivery is
+    a full aligned k-block: it is written with one contiguous
+    ``dynamic_update_slice`` over the batched stores — O(n·k·|param|)
+    bytes instead of the masked O(n·m·|param|) pass, with no runtime
+    conditional (a ``lax.cond`` here would copy the whole store
+    through the branch). Disabled epochs (warm-up) write the same
+    k slots with ``valid=False`` payloads and hold ``ptr``, which is
+    unobservable through eq. 4 and leaves sharing-phase contents
+    bit-identical to the sequential ring semantics — assuming DDAL's
+    monotone warm-up → sharing schedule (an empty delivery *after*
+    valid ones would stomp k live slots; pass ``topo=None`` to force
+    the exact general path under arbitrary gating). The general path
+    handles partial / masked deliveries.
+    """
+    n, k, planes = flight.T.shape
+    D1 = planes - 1                    # last plane = disabled scratch
+    slot = epoch % D1
+    pieces = tree_map(lambda b: b[:, :, slot], flight.grads)  # (n,k,..)
+    Tm = flight.T[:, :, slot]
+    Rm = flight.R[:, :, slot]
+    Vm = flight.valid[:, :, slot]
+    m = stores.T.shape[1]
+
+    if _regular_exchange(topo, m, k):
+        # all-or-nothing delivery: Vm is uniformly True (sharing) or
+        # False (warm-up); ptr stays k-aligned so the block never wraps
+        start = stores.ptr[0] % m
+        delivered = Vm[0, 0]
+
+        def wr(buf, xs):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, xs.astype(buf.dtype), start, axis=1)
+
+        new_stores = KnowledgeStore(
+            grads=tree_map(wr, stores.grads, pieces),
+            T=wr(stores.T, Tm),
+            R=wr(stores.R, Rm),
+            valid=wr(stores.valid, Vm),
+            ptr=stores.ptr + k * delivered.astype(jnp.int32),
+        )
+    else:
+        def pop(dst_store, dst_idx):
+            return append_many(
+                dst_store, tree_map(lambda x: x[dst_idx], pieces),
+                Tm[dst_idx], Rm[dst_idx], Vm[dst_idx])
+        new_stores = jax.vmap(pop)(stores, jnp.arange(n))
+
+    cleared = flight._replace(
+        valid=flight.valid.at[:, :, slot].set(False))
+    return cleared, new_stores
+
+
+# ---------------------------------------------------------------------
+# dense all-to-all delay line (reference / equivalence oracle)
+# ---------------------------------------------------------------------
 class InFlight(NamedTuple):
     """Delay-line simulating asynchronous delivery. Slot layout:
     (dst, delay_slot, src, *piece); a piece from src→dst sent at epoch

@@ -21,6 +21,13 @@ sum is linear), but O(1) memory instead of m copies of a 34B-parameter
 gradient. This matches the paper's own experiment ("gradients generated
 by and received during its previous 1000 epochs"). The ring-buffer
 (piece-faithful) form lives in ``repro.core.ddal`` for agent-scale use.
+
+Sparse topologies: with a ``repro.core.topology.Topology`` the share
+step reduces over each destination's **in-neighbors** via a
+segment-sum on the static edge list instead of a global all-reduce —
+O(|E|) cross-pod traffic instead of O(A²) — and both eq. 4
+normalisations (T and R) become neighbor-local. The ``full`` + uniform
+case keeps the cheaper global-sum fast path.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.common.pytree import tree_map, tree_zeros_like
 from repro.configs.base import ArchConfig, GroupSpec
+from repro.core.topology import Topology, make_topology
 from repro.core.weighting import relevance_matrix, training_experience
 from repro.models import get_model
 from repro.optim import Optimizer
@@ -112,10 +120,49 @@ def _combine(know: Knowledge, R: jnp.ndarray, uniform: bool):
     return tree_map(avg, know.tg, know.rg)
 
 
+def _combine_topo(know: Knowledge, topo: Topology):
+    """eq. 4 with neighbor-local normalisation: for each destination,
+    both the T and R terms sum over its in-neighbors only. The scalar
+    denominators reduce with a segment-sum over the static edge list;
+    the gradient leaves reduce with a neighbor-masked adjacency
+    matmul — mathematically the same segment-sum, but it never
+    materialises (E, *param) gathered copies of the accumulators
+    (a k-fold peak-memory blowup at LLM scale). GSPMD lowers the
+    contraction over the pod-sharded agent axis to collectives that
+    move only the masked edges' worth of data."""
+    A, k = topo.nbr.shape
+    eps = 1e-12
+    src = jnp.reshape(topo.nbr, (-1,))               # (E,) sources
+    seg = jnp.repeat(jnp.arange(A), k)               # (E,) destinations
+    m = jnp.reshape(topo.mask, (-1,)).astype(jnp.float32)
+    rel = jnp.reshape(topo.relevance, (-1,)) * m
+
+    def seg_sum(x):
+        return jax.ops.segment_sum(x, seg, num_segments=A)
+
+    tden = jnp.maximum(seg_sum(m * know.tsum[src]), eps)     # (A,)
+    rden = jnp.maximum(seg_sum(rel * know.rsum[src]), eps)
+
+    # dense (A, A) src→dst weights, zero off-graph (A = pods, small)
+    Rd = topo.dense_relevance()
+    M = jnp.zeros((A, A)).at[src, seg].add(m)
+
+    def avg(tg_leaf, rg_leaf):
+        ex = (-1,) + (1,) * (tg_leaf.ndim - 1)
+        t = jnp.tensordot(M, tg_leaf, axes=(0, 0))   # (A_dst, *param)
+        r = jnp.tensordot(Rd, rg_leaf, axes=(0, 0))
+        t = t / jnp.reshape(tden, ex)
+        r = r / jnp.reshape(rden, ex)
+        return 0.5 * (t + r)
+
+    return tree_map(avg, know.tg, know.rg)
+
+
 def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                           opt: Optimizer,
                           relevance: Optional[jnp.ndarray] = None,
-                          loss_fn: Optional[Callable] = None):
+                          loss_fn: Optional[Callable] = None,
+                          topology: Optional[Topology] = None):
     """Build the jittable DDAL train step.
 
     Returns step(state, batch) -> (state', metrics); ``batch`` leaves
@@ -126,10 +173,23 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
         def loss_fn(params, batch):        # noqa: F811
             return model.loss(cfg, params, batch)
     A = spec.n_agents
-    uniform = spec.r_weighting == "uniform" or relevance is None
+    # full + uniform keeps the global-sum fast path; any named sparse
+    # topology (or an explicit Topology) takes the segment-sum path.
+    if topology is None and spec.topology != "full":
+        topology = make_topology(spec)
+    if topology is not None and relevance is not None:
+        topology = topology.with_relevance(relevance)
+    uniform = (topology is None and relevance is None
+               and spec.r_weighting == "uniform")
     R = (relevance if relevance is not None
-         else relevance_matrix(A, "ring" if spec.topology == "ring"
-                               else "uniform"))
+         else relevance_matrix(A, "uniform"))
+
+    if topology is not None:
+        def combine(k2):
+            return _combine_topo(k2, topology)
+    else:
+        def combine(k2):
+            return _combine(k2, R, uniform)
 
     vopt = jax.vmap(opt.update, in_axes=(0, 0, 0, None))
 
@@ -159,7 +219,7 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                            rg=rg, rsum=know.rsum + 1.0)
 
             def do_share(_):
-                gbar = _combine(k2, R, uniform)
+                gbar = combine(k2)
                 p2, o2 = vopt(gbar, state.opt_state, state.params, step)
                 return p2, o2, init_knowledge(state.params, kdt)
 

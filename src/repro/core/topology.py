@@ -1,0 +1,266 @@
+"""Communication topologies for DDAL — neighbor-indexed sparse graphs.
+
+The paper's group is a set of geographically distributed agents that
+exchange knowledge over a *communication graph*, not a shared
+environment (paper §5; arXiv 2501.11818 and 1912.03821 make the same
+point for networked MARL). The seed repo simulated that graph with a
+dense all-to-all delay line — O(n²·D·|params|) memory — and used
+``GroupSpec.topology`` only as a relevance prior. This module makes the
+graph first-class:
+
+A ``Topology`` is a *neighbor index table*: for every destination agent
+``i``, ``nbr[i, j]`` names the source agent feeding its ``j``-th
+incoming edge slot (``j < k``), with a validity ``mask`` for
+non-uniform in-degrees and per-edge ``delay`` / ``relevance``
+annotations. All arrays are static (host-built with numpy) so they jit
+as constants; knowledge exchange becomes gather/scatter over the table
+(``repro.core.knowledge.sparse_send`` / ``sparse_deliver``) with
+delay-line memory O(n·k·D) instead of O(n²·D). The dense ``full``
+topology is the ``k = n`` special case, so the seed semantics are a
+strict subset.
+
+Every constructor includes the self-loop edge (an agent's own pieces
+always enter its own store K_i, paper Algorithm 1 line 8) with delay 0
+unless overridden.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Topology(NamedTuple):
+    """Sparse communication graph over ``n`` agents.
+
+    nbr:       (n, k) int32 — ``nbr[i, j]`` = source agent of dst i's
+               j-th incoming edge (arbitrary value where masked out).
+    mask:      (n, k) bool — which edge slots are real edges.
+    delay:     (n, k) int32 — per-edge delivery delay in epochs.
+    relevance: (n, k) float32 — per-edge relevance R[src→dst] fed to
+               the eq. 4 weighting on delivery.
+    """
+    nbr: jnp.ndarray
+    mask: jnp.ndarray
+    delay: jnp.ndarray
+    relevance: jnp.ndarray
+
+    # ------------------------------------------------------------------
+    @property
+    def n_agents(self) -> int:
+        return self.nbr.shape[0]
+
+    @property
+    def degree(self) -> int:
+        """Max in-degree k (the padded edge-slot count)."""
+        return self.nbr.shape[1]
+
+    @property
+    def n_edges(self) -> int:
+        """Number of real (unmasked) edges, self-loops included."""
+        return int(np.asarray(self.mask).sum())
+
+    @property
+    def max_delay(self) -> int:
+        return int(np.asarray(jnp.max(self.delay * self.mask)))
+
+    # ------------------------------------------------------------------
+    def with_delay(self, delay, per_edge: bool = False) -> "Topology":
+        """Attach delays: a scalar, an (n, n) src→dst matrix (gathered
+        onto the edge table), or an (n, k) per-edge array. When k == n
+        the two array forms are shape-ambiguous and the dense src→dst
+        reading wins — pass ``per_edge=True`` to force the
+        (dst, edge-slot) interpretation (they differ by a transpose on
+        the ``full`` topology)."""
+        n, k = self.nbr.shape
+        d = jnp.asarray(delay, jnp.int32)
+        if d.ndim == 0:
+            d = jnp.full((n, k), d, jnp.int32)
+        elif d.shape == (n, n) and not per_edge:
+            dst = jnp.arange(n)[:, None]
+            d = d[self.nbr, dst]                      # (n, k)
+        elif d.shape != (n, k):
+            raise ValueError(f"delay shape {d.shape} != (), ({n},{n}) "
+                             f"or ({n},{k})")
+        return self._replace(delay=jnp.where(self.mask, d, 0))
+
+    def with_relevance(self, relevance,
+                       per_edge: bool = False) -> "Topology":
+        """Attach relevance: an (n, n) matrix R[src, dst] (gathered
+        onto the edge table) or an (n, k) per-edge array. See
+        ``with_delay`` for the k == n ambiguity and ``per_edge``."""
+        n, k = self.nbr.shape
+        r = jnp.asarray(relevance, jnp.float32)
+        if r.shape == (n, n) and not per_edge:
+            dst = jnp.arange(n)[:, None]
+            r = r[self.nbr, dst]
+        elif r.shape != (n, k):
+            raise ValueError(f"relevance shape {r.shape} != ({n},{n}) "
+                             f"or ({n},{k})")
+        return self._replace(
+            relevance=jnp.where(self.mask, r, 0.0))
+
+    def dense_relevance(self) -> jnp.ndarray:
+        """Scatter the edge relevance back to an (n, n) R[src, dst]
+        matrix (zeros off-graph) — for code still wanting the dense
+        form (e.g. the streaming trainer's matmul path)."""
+        n, k = self.nbr.shape
+        R = jnp.zeros((n, n), jnp.float32)
+        dst = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+        vals = jnp.where(self.mask, self.relevance, 0.0)
+        return R.at[self.nbr, dst].add(vals)
+
+    def delay_line_bytes(self, n_params: int, max_delay: int,
+                         dtype_bytes: int = 4) -> int:
+        """Static memory of a SparseInFlight over this topology
+        (D+1 delivery planes + 1 scratch plane)."""
+        n, k = self.nbr.shape
+        planes = max_delay + 2
+        meta = 3 * n * k * planes * 4        # T, R (+valid ≈ 1B, round)
+        return n * k * planes * n_params * dtype_bytes + meta
+
+
+# ---------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------
+def _from_neighbor_lists(nbrs: Sequence[Sequence[int]]) -> Topology:
+    """Build a padded (n, k) table from per-dst in-neighbor lists."""
+    n = len(nbrs)
+    k = max(1, max(len(v) for v in nbrs))
+    nbr = np.zeros((n, k), np.int32)
+    mask = np.zeros((n, k), bool)
+    for i, v in enumerate(nbrs):
+        nbr[i, :len(v)] = v
+        mask[i, :len(v)] = True
+    return Topology(
+        nbr=jnp.asarray(nbr),
+        mask=jnp.asarray(mask),
+        delay=jnp.zeros((n, k), jnp.int32),
+        relevance=jnp.asarray(mask, jnp.float32),
+    )
+
+
+def full(n: int) -> Topology:
+    """All-to-all: k = n, ``nbr[i, j] = j`` — the dense seed layout as
+    a special case (edge slot order == source order, so the sparse
+    path is bitwise-identical to the dense reference)."""
+    return _from_neighbor_lists([list(range(n)) for _ in range(n)])
+
+
+def ring(n: int) -> Topology:
+    """Bidirectional ring: each agent hears itself and its two ring
+    neighbours (matches ``relevance_matrix(n, "ring")``'s support)."""
+    return _from_neighbor_lists(
+        [sorted({(i - 1) % n, i, (i + 1) % n}) for i in range(n)])
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """2-D torus (rows × cols grid, wrap-around): self + the 4-mesh
+    neighbourhood — the classic pod-interconnect shape."""
+    n = rows * cols
+    nbrs = []
+    for i in range(n):
+        r, c = divmod(i, cols)
+        nbrs.append(sorted({
+            i,
+            ((r - 1) % rows) * cols + c,
+            ((r + 1) % rows) * cols + c,
+            r * cols + (c - 1) % cols,
+            r * cols + (c + 1) % cols,
+        }))
+    return _from_neighbor_lists(nbrs)
+
+
+def star(n: int, hub: int = 0) -> Topology:
+    """Hub-and-spoke: every leaf exchanges with the hub only. The hub's
+    in-degree is n (it hears everyone), so the padded k is n — star is
+    inherently centralised; use it for parameter-server-style groups."""
+    nbrs = []
+    for i in range(n):
+        if i == hub:
+            nbrs.append(list(range(n)))
+        else:
+            nbrs.append(sorted({i, hub}))
+    return _from_neighbor_lists(nbrs)
+
+
+def random_k(n: int, k: int, seed: int = 0) -> Topology:
+    """Seeded gossip graph: each destination hears itself plus k−1
+    distinct uniformly-drawn other agents. Regular in-degree k, so the
+    delay line is exactly (n, k, D+1) with no padding waste."""
+    if k < 1:
+        raise ValueError("random_k needs k >= 1 (the self-loop)")
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    nbrs = []
+    for i in range(n):
+        others = np.delete(np.arange(n), i)
+        pick = rng.choice(others, size=k - 1, replace=False)
+        nbrs.append(sorted({i, *pick.tolist()}))
+    return _from_neighbor_lists(nbrs)
+
+
+def hierarchical(n: int, pod_size: int = 4) -> Topology:
+    """Pods-of-pods: dense all-to-all inside each pod of ``pod_size``
+    agents; the first agent of each pod is a *leader* additionally
+    connected all-to-all with the other leaders. Knowledge crosses pods
+    in two hops (member → leader → member), mirroring ICI-dense /
+    DCN-sparse pod fabrics."""
+    pod_size = max(1, min(pod_size, n))
+    leaders = list(range(0, n, pod_size))
+    nbrs = []
+    for i in range(n):
+        pod = i // pod_size
+        members = [j for j in range(pod * pod_size,
+                                    min((pod + 1) * pod_size, n))]
+        s = set(members) | {i}
+        if i in leaders:
+            s |= set(leaders)
+        nbrs.append(sorted(s))
+    return _from_neighbor_lists(nbrs)
+
+
+# ---------------------------------------------------------------------
+# GroupSpec dispatch
+# ---------------------------------------------------------------------
+TOPOLOGIES = ("full", "ring", "torus2d", "star", "random_k",
+              "hierarchical")
+
+
+def _torus_dims(n: int):
+    """Most-square rows × cols factorisation of n."""
+    r = int(math.isqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def make_topology(spec, delay=None,
+                  relevance=None) -> Topology:
+    """Build the topology named by a ``GroupSpec`` (``topology``,
+    ``degree``, ``topology_seed``), then attach optional dense or
+    per-edge ``delay`` / ``relevance`` overrides."""
+    n = spec.n_agents
+    name = spec.topology
+    if name == "full":
+        topo = full(n)
+    elif name == "ring":
+        topo = ring(n)
+    elif name == "torus2d":
+        topo = torus2d(*_torus_dims(n))
+    elif name == "star":
+        topo = star(n)
+    elif name == "random_k":
+        topo = random_k(n, spec.degree, spec.topology_seed)
+    elif name == "hierarchical":
+        topo = hierarchical(n, pod_size=spec.degree)
+    else:
+        raise ValueError(
+            f"unknown topology {name!r}; expected one of {TOPOLOGIES}")
+    if relevance is not None:
+        topo = topo.with_relevance(relevance)
+    if delay is not None:
+        topo = topo.with_delay(delay)
+    return topo

@@ -8,7 +8,7 @@ over the data axes, sequence slots unsharded).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

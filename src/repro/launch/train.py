@@ -25,7 +25,12 @@ def main(argv=None):
     p.add_argument("--threshold", type=int, default=5)
     p.add_argument("--minibatch", type=int, default=5)
     p.add_argument("--lr", type=float, default=1e-3)
-    p.add_argument("--topology", default="full", choices=["full", "ring"])
+    p.add_argument("--topology", default="full",
+                   choices=["full", "ring", "torus2d", "star",
+                            "random_k", "hierarchical"])
+    p.add_argument("--degree", type=int, default=4,
+                   help="k for random_k; pod size for hierarchical")
+    p.add_argument("--topology-seed", type=int, default=0)
     p.add_argument("--full", action="store_true",
                    help="full (not reduced) config — TPU pods only")
     p.add_argument("--mesh", default="cpu",
@@ -35,10 +40,10 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     import jax
-    import jax.numpy as jnp
 
     from repro import optim
     from repro.checkpoint import save
+    from repro.common.sharding import set_mesh
     from repro.configs import get_arch_config
     from repro.configs.base import GroupSpec, ShapeConfig
     from repro.core import init_train_state, make_group_train_step
@@ -50,6 +55,8 @@ def main(argv=None):
         cfg = cfg.reduced()
     spec = GroupSpec(n_agents=args.agents, threshold=args.threshold,
                      minibatch=args.minibatch, topology=args.topology,
+                     degree=args.degree,
+                     topology_seed=args.topology_seed,
                      knowledge_mode="streaming")
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
     opt = optim.adamw(args.lr)
@@ -57,7 +64,7 @@ def main(argv=None):
 
     if args.mesh != "cpu":
         mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
-        ctx = jax.set_mesh(mesh)
+        ctx = set_mesh(mesh)
     else:
         import contextlib
         ctx = contextlib.nullcontext()

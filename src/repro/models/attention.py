@@ -9,7 +9,6 @@ full caches and sliding-window ring buffers.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ scan over the Mamba2 layers of each block.
 from __future__ import annotations
 
 import zlib
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ device allocation) — the multi-pod dry-run lowers against these.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,6 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import hybrid as hy
 from repro.models import ssm_model as ssm
 from repro.models import transformer as tf
-from repro.models.common import cross_entropy
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,7 +5,7 @@ depth; DeepSeek's leading dense layer runs outside the scan.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

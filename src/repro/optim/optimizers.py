@@ -9,13 +9,11 @@ sharing starts) so the optimiser is agnostic to group-agent learning.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.common.pytree import (global_norm_clip, tree_add_scaled,
-                                 tree_map, tree_zeros_like)
+from repro.common.pytree import global_norm_clip, tree_map, tree_zeros_like
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,13 +1,20 @@
 """RL substrate for the paper-faithful GARL experiments: pure-JAX
 environments (CartPole-v0, GridWorld), A2C and double-dueling-DQN
 agents exposing the DDAL callback protocol."""
-from repro.rl.a2c import A2CState, a2c_loss, init_a2c, make_a2c_callbacks  # noqa: F401
+from repro.rl.a2c import (  # noqa: F401
+    A2CState,
+    a2c_loss,
+    init_a2c,
+    make_a2c_callbacks,
+    make_a2c_group,
+)
 from repro.rl.dqn import (  # noqa: F401
     DQNConfig,
     DQNState,
     dqn_loss,
     init_dqn,
     make_dqn_callbacks,
+    make_dqn_group,
 )
 from repro.rl.envs import CartPole, GridWorld  # noqa: F401
 from repro.rl.rollout import Trajectory, episode_return, run_episode  # noqa: F401

@@ -13,7 +13,7 @@ plus the value-network MSE on the same one-step target. Exposed as the
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,3 +81,22 @@ def make_a2c_callbacks(env, opt: Optimizer, gamma: float = 0.99,
         return state.params
 
     return gen_grads, apply_grads, params_of
+
+
+def make_a2c_group(env, opt: Optimizer, spec, key,
+                   topology=None, gamma: float = 0.99,
+                   entropy_coef: float = 0.01,
+                   hidden: int = 64,
+                   relevance: Optional[jnp.ndarray] = None,
+                   delay: Optional[jnp.ndarray] = None):
+    """Entry point for a DDA3C group: builds the DDAL loop (over
+    ``spec``'s communication topology, or an explicit ``Topology``)
+    and the initial GroupState. Returns (ddal, group_state)."""
+    from repro.core import DDAL
+    gen, app, pof = make_a2c_callbacks(env, opt, gamma=gamma,
+                                       entropy_coef=entropy_coef)
+    ddal = DDAL(spec, gen, app, pof, topology=topology,
+                relevance=relevance, delay=delay)
+    astates = jax.vmap(lambda k: init_a2c(k, env, opt, hidden))(
+        jax.random.split(key, spec.n_agents))
+    return ddal, ddal.init(astates)

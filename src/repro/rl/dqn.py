@@ -15,7 +15,7 @@ lines 2–4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -180,3 +180,20 @@ def make_dqn_callbacks(env, opt: Optimizer, cfg: DQNConfig):
         return state.params
 
     return gen_grads, apply_grads, params_of
+
+
+def make_dqn_group(env, opt: Optimizer, spec, key,
+                   cfg: Optional[DQNConfig] = None, topology=None,
+                   relevance: Optional[jnp.ndarray] = None,
+                   delay: Optional[jnp.ndarray] = None):
+    """Entry point for a DDADQN group: builds the DDAL loop (over
+    ``spec``'s communication topology, or an explicit ``Topology``)
+    and the initial GroupState. Returns (ddal, group_state)."""
+    from repro.core import DDAL
+    cfg = cfg or DQNConfig()
+    gen, app, pof = make_dqn_callbacks(env, opt, cfg)
+    ddal = DDAL(spec, gen, app, pof, topology=topology,
+                relevance=relevance, delay=delay)
+    astates = jax.vmap(lambda k: init_dqn(k, env, opt, cfg))(
+        jax.random.split(key, spec.n_agents))
+    return ddal, ddal.init(astates)

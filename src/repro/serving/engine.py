@@ -11,7 +11,7 @@ Decode-shape dry-runs lower exactly ``decode_step`` (one token + cache).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

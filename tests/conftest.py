@@ -2,3 +2,88 @@ import jax
 
 # CPU tests run in fp32 (reduced configs set this too); keep x64 off.
 jax.config.update("jax_enable_x64", False)
+
+# ---------------------------------------------------------------------
+# hypothesis fallback: CI installs the real package (pyproject.toml
+# [dev] extra); on bare rigs without it we register a minimal shim so
+# the property tests still run — deterministic seeded random sampling
+# instead of real shrinking/coverage. Must happen before test modules
+# import `hypothesis`, which is why it lives in conftest.
+# ---------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import sys
+    import types
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                allow_infinity=False, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    def _tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def _settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*strats, **kwstrats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner():
+                n = getattr(fn, "_shim_max_examples", 25)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    args = [s.draw(rng) for s in strats]
+                    kwargs = {k: s.draw(rng)
+                              for k, s in kwstrats.items()}
+                    fn(*args, **kwargs)
+            # hide the wrapped signature so pytest doesn't mistake the
+            # strategy parameters for fixtures
+            runner.__signature__ = inspect.Signature()
+            del runner.__wrapped__
+            return runner
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _st.tuples = _tuples
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -16,8 +16,12 @@ from repro import optim
 from repro.configs import ARCH_IDS, get_arch_config
 from repro.configs.base import GroupSpec, ShapeConfig
 from repro.core import init_train_state, make_group_train_step
-from repro.data import StreamSpec, make_agent_batch, make_group_batch
+from repro.data import StreamSpec, make_group_batch
 from repro.models import get_model, make_batch
+
+# full model-zoo sweep (~2–3 min): excluded from the CI tier-1 fast
+# lane, still part of the full local tier-1 run
+pytestmark = pytest.mark.slow
 
 SHAPE = ShapeConfig("smoke", 64, 2, "train")
 

@@ -278,7 +278,7 @@ def test_sanitize_partition_specs():
 
 def test_cache_partition_specs_cover_all_archs():
     from jax.sharding import PartitionSpec as P
-    from repro.configs import ARCH_IDS, get_arch_config, arch_for_shape
+    from repro.configs import ARCH_IDS, get_arch_config
     from repro.configs.base import ShapeConfig
     from repro.launch.shardings import cache_partition_specs
     from repro.models import cache_specs

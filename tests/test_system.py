@@ -6,6 +6,8 @@ from __future__ import annotations
 import os
 import tempfile
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,8 +18,11 @@ from repro.configs import get_arch_config
 from repro.configs.base import GroupSpec, ShapeConfig
 from repro.core import init_train_state, make_group_train_step
 from repro.data import StreamSpec, make_group_batch
-from repro.models import get_model
 from repro.serving import ServeConfig, ServeEngine
+
+# end-to-end train → checkpoint → serve loops (~40 s): excluded from
+# the CI tier-1 fast lane, still part of the full local tier-1 run
+pytestmark = pytest.mark.slow
 
 
 def _train(cfg, spec, steps, seed=0, lr=1e-3):

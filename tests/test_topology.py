@@ -1,0 +1,409 @@
+"""Topology subsystem tests: neighbor-table constructors, the sparse
+delay line's bitwise equivalence with the dense all-to-all reference on
+the ``full`` topology, graph-local delivery (ring/star), eq. 4
+invariants over sparsely-populated stores, and the streaming trainer's
+segment-sum combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import GroupSpec
+from repro.core import DDAL, knowledge as K, topology as T
+from repro.core.sharded_ddal import Knowledge, _combine, _combine_topo
+from repro.core.weighting import eq4_weights
+
+
+# ----------------------------------------------------------------------
+# constructors
+# ----------------------------------------------------------------------
+def _neighbors(topo, i):
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    return {int(s) for s, m in zip(nbr[i], mask[i]) if m}
+
+
+def test_full_is_dense_layout():
+    topo = T.full(5)
+    assert topo.nbr.shape == (5, 5)
+    # slot j ↔ source j: the invariant the bitwise-equivalence relies on
+    np.testing.assert_array_equal(
+        np.asarray(topo.nbr), np.tile(np.arange(5), (5, 1)))
+    assert bool(np.asarray(topo.mask).all())
+
+
+@pytest.mark.parametrize("make,n", [
+    (lambda: T.full(6), 6),
+    (lambda: T.ring(6), 6),
+    (lambda: T.torus2d(2, 3), 6),
+    (lambda: T.star(6), 6),
+    (lambda: T.random_k(6, 3), 6),
+    (lambda: T.hierarchical(6, 3), 6),
+])
+def test_every_topology_has_self_loops(make, n):
+    """An agent's own pieces always reach its own store K_i."""
+    topo = make()
+    assert topo.n_agents == n
+    for i in range(n):
+        assert i in _neighbors(topo, i)
+
+
+def test_ring_neighbor_sets():
+    topo = T.ring(6)
+    for i in range(6):
+        assert _neighbors(topo, i) == {(i - 1) % 6, i, (i + 1) % 6}
+
+
+def test_torus2d_neighbor_sets():
+    topo = T.torus2d(3, 3)
+    # agent 4 = centre of the 3x3 torus: self + 4-mesh
+    assert _neighbors(topo, 4) == {1, 3, 4, 5, 7}
+
+
+def test_star_hub_and_leaves():
+    topo = T.star(5)
+    assert _neighbors(topo, 0) == {0, 1, 2, 3, 4}
+    for leaf in range(1, 5):
+        assert _neighbors(topo, leaf) == {0, leaf}
+
+
+def test_random_k_is_regular_and_seeded():
+    a = T.random_k(16, 4, seed=7)
+    b = T.random_k(16, 4, seed=7)
+    c = T.random_k(16, 4, seed=8)
+    np.testing.assert_array_equal(np.asarray(a.nbr), np.asarray(b.nbr))
+    assert not np.array_equal(np.asarray(a.nbr), np.asarray(c.nbr))
+    for i in range(16):
+        nb = _neighbors(a, i)
+        assert len(nb) == 4 and i in nb
+
+
+def test_hierarchical_pods_and_leaders():
+    topo = T.hierarchical(8, pod_size=4)
+    # pod member (non-leader): its own pod only
+    assert _neighbors(topo, 1) == {0, 1, 2, 3}
+    # leader of pod 0: own pod + the other leader
+    assert _neighbors(topo, 0) == {0, 1, 2, 3, 4}
+    # leader of pod 1
+    assert _neighbors(topo, 4) == {0, 4, 5, 6, 7}
+
+
+def test_make_topology_dispatch_and_errors():
+    spec = GroupSpec(n_agents=9, topology="torus2d")
+    topo = T.make_topology(spec)
+    assert topo.n_agents == 9 and topo.degree == 5
+    spec = GroupSpec(n_agents=8, topology="random_k", degree=3,
+                     topology_seed=5)
+    topo = T.make_topology(spec)
+    np.testing.assert_array_equal(
+        np.asarray(topo.nbr), np.asarray(T.random_k(8, 3, 5).nbr))
+    with pytest.raises(ValueError, match="unknown topology"):
+        T.make_topology(GroupSpec(n_agents=4, topology="moebius"))
+
+
+def test_with_delay_and_relevance_gather_dense_matrices():
+    n = 4
+    topo = T.ring(n)
+    D = jnp.arange(n * n, dtype=jnp.int32).reshape(n, n)   # D[src,dst]
+    R = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n) + 1.0
+    topo = topo.with_delay(D).with_relevance(R)
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    for i in range(n):
+        for j in range(topo.degree):
+            if mask[i, j]:
+                src = nbr[i, j]
+                assert int(topo.delay[i, j]) == int(D[src, i])
+                assert float(topo.relevance[i, j]) == float(R[src, i])
+
+
+def test_dense_relevance_round_trip():
+    n = 5
+    R = jnp.asarray(np.random.default_rng(0).uniform(0.1, 1, (n, n)),
+                    jnp.float32)
+    topo = T.ring(n).with_relevance(R)
+    Rd = np.asarray(topo.dense_relevance())
+    ring_mask = np.zeros((n, n))
+    for i in range(n):
+        for s in [(i - 1) % n, i, (i + 1) % n]:
+            ring_mask[s, i] = 1.0
+    np.testing.assert_allclose(Rd, np.asarray(R) * ring_mask, rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# dense-vs-sparse delay-line equivalence (full topology ⇒ bitwise)
+# ----------------------------------------------------------------------
+def _rand_pieces(rng, n, p):
+    return {"w": jnp.asarray(rng.normal(size=(n, p)), jnp.float32)}
+
+
+def test_sparse_full_equals_dense_reference_bitwise():
+    """N epochs of send/deliver over random pieces and random per-edge
+    delays: the sparse path on the ``full`` topology must reproduce the
+    dense all-to-all reference bit for bit."""
+    n, D, p, epochs = 3, 2, 5, 7
+    rng = np.random.default_rng(0)
+    delay = jnp.asarray(rng.integers(0, D + 1, (n, n)), jnp.int32)
+    params = {"w": jnp.zeros((p,))}
+    topo = T.full(n).with_delay(delay)
+    dense = K.make_inflight(params, n, D)
+    sparse = K.make_sparse_inflight(params, topo, D)
+    stores_d = jax.vmap(lambda _: K.make_store(params, 4))(jnp.arange(n))
+    stores_s = jax.vmap(lambda _: K.make_store(params, 4))(jnp.arange(n))
+    R = jnp.ones((n, n))
+    for e in range(epochs):
+        pieces = _rand_pieces(rng, n, p)
+        Tw = jnp.asarray(rng.uniform(1, 5, (n,)), jnp.float32)
+        dense = K.send(dense, pieces, Tw, R, delay, e, True)
+        dense, stores_d = K.deliver(dense, stores_d, e)
+        sparse = K.sparse_send(sparse, topo, pieces, Tw, e, True)
+        sparse, stores_s = K.sparse_deliver(sparse, stores_s, e)
+    for a, b in zip(jax.tree.leaves(stores_d), jax.tree.leaves(stores_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_regular_fast_path_equals_dense_reference_bitwise():
+    """The contiguous k-block delivery fast path (full mask, uniform
+    nonzero delay, m % k == 0 — see ``_regular_exchange``) must stay
+    bitwise-identical to the dense reference, including across the
+    warm-up → sharing transition (disabled sends write the scratch
+    plane; disabled deliveries hold ptr)."""
+    n, d, m, p, epochs = 4, 1, 8, 5, 10
+    rng = np.random.default_rng(3)
+    topo = T.full(n).with_delay(d)
+    assert K._regular_exchange(topo, m, n)
+    params = {"w": jnp.zeros((p,))}
+    delay = jnp.full((n, n), d, jnp.int32)
+    dense = K.make_inflight(params, n, d)
+    sparse = K.make_sparse_inflight(params, topo, d)
+    stores_d = jax.vmap(lambda _: K.make_store(params, m))(jnp.arange(n))
+    stores_s = jax.vmap(lambda _: K.make_store(params, m))(jnp.arange(n))
+    R = jnp.ones((n, n))
+    for e in range(epochs):
+        enabled = e >= 3                    # warm-up, then sharing
+        pieces = _rand_pieces(rng, n, p)
+        Tw = jnp.asarray(rng.uniform(1, 5, (n,)), jnp.float32)
+        dense = K.send(dense, pieces, Tw, R, delay, e, enabled)
+        dense, stores_d = K.deliver(dense, stores_d, e)
+        sparse = K.sparse_send(sparse, topo, pieces, Tw, e, enabled)
+        sparse, stores_s = K.sparse_deliver(sparse, stores_s, e, topo)
+    for a, b in zip(jax.tree.leaves(stores_d), jax.tree.leaves(stores_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ddal_full_topology_equals_dense_reference_groupstate():
+    """Full DDAL loop vs a reference epoch loop built on the dense
+    InFlight: identical agent params and stores after N epochs."""
+    n, epochs = 3, 12
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=2, m_pieces=6)
+    delay = jnp.asarray([[0, 1, 2], [1, 0, 1], [2, 1, 0]], jnp.int32)
+
+    def gen(state, key):
+        del key
+        return {"w": state["w"] - state["t"]}, {}, state
+
+    def app(state, g):
+        return {"w": state["w"] - 0.5 * g["w"], "t": state["t"]}
+
+    ddal = DDAL(spec, gen, app, lambda s: {"w": s["w"]}, delay=delay)
+    states0 = {"w": jnp.zeros((n,)),
+               "t": jnp.arange(n, dtype=jnp.float32)}
+    gs = ddal.init(states0)
+    step = jax.jit(ddal.epoch_step)
+    for e in range(epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+
+    # dense reference: same update schedule over the seed's delay line
+    from repro.core.weighting import training_experience
+    params0 = {"w": jnp.zeros(())}
+    stores = jax.vmap(lambda _: K.make_store(params0, spec.m_pieces))(
+        jnp.arange(n))
+    flight = K.make_inflight(params0, n, int(delay.max()))
+    astates = states0
+    R = jnp.ones((n, n))
+    for e in range(epochs):
+        grads = {"w": astates["w"] - astates["t"]}
+        Tw = jnp.broadcast_to(training_experience(e, "epochs"), (n,))
+        flight = K.send(flight, grads, Tw, R, delay, e, True)
+        flight, stores = K.deliver(flight, stores, e)
+        if e % spec.minibatch == 0:
+            gbar, wsum = jax.vmap(K.weighted_average)(stores)
+            new = jax.vmap(app)(astates, gbar)
+            keep = wsum > 0
+            astates = {"w": jnp.where(keep, new["w"], astates["w"]),
+                       "t": astates["t"]}
+    np.testing.assert_array_equal(np.asarray(gs.agent_states["w"]),
+                                  np.asarray(astates["w"]))
+    for a, b in zip(jax.tree.leaves(gs.stores), jax.tree.leaves(stores)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------
+# graph-local delivery
+# ----------------------------------------------------------------------
+def _sources_seen(gs, n):
+    """Piece payloads encode the source agent id; return per-dst sets."""
+    vals = np.asarray(gs.stores.grads["w"])      # (n, m, 1)
+    valid = np.asarray(gs.stores.valid)          # (n, m)
+    return [{int(v) for v in vals[i, valid[i], 0]} for i in range(n)]
+
+
+def _run_id_stamped_group(spec, epochs=6):
+    """Each agent 'gradient' is its own id ⇒ stores reveal provenance."""
+    def gen(state, key):
+        del key
+        return {"w": state["id"]}, {}, state
+
+    def app(state, g):
+        return state                     # params frozen; stores matter
+
+    ddal = DDAL(spec, gen, app, lambda s: {"w": s["w"]})
+    gs = ddal.init({"w": jnp.zeros((spec.n_agents, 1)),
+                    "id": jnp.arange(spec.n_agents,
+                                     dtype=jnp.float32)[:, None]})
+    step = jax.jit(ddal.epoch_step)
+    for e in range(epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e),
+                                          spec.n_agents))
+    return gs
+
+
+def test_ring_delivery_reaches_only_graph_neighbors():
+    n = 6
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1_000,
+                     m_pieces=32, topology="ring")
+    gs = _run_id_stamped_group(spec)
+    seen = _sources_seen(gs, n)
+    for i in range(n):
+        assert seen[i] == {(i - 1) % n, i, (i + 1) % n}
+
+
+def test_star_delivery_is_hub_centric():
+    n = 5
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1_000,
+                     m_pieces=32, topology="star")
+    gs = _run_id_stamped_group(spec)
+    seen = _sources_seen(gs, n)
+    assert seen[0] == set(range(n))
+    for leaf in range(1, n):
+        assert seen[leaf] == {0, leaf}
+
+
+def test_random_k_delivery_matches_neighbor_table():
+    n = 8
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1_000,
+                     m_pieces=32, topology="random_k", degree=3,
+                     topology_seed=11)
+    gs = _run_id_stamped_group(spec)
+    topo = T.make_topology(spec)
+    seen = _sources_seen(gs, n)
+    for i in range(n):
+        assert seen[i] == _neighbors(topo, i)
+
+
+def test_warmup_still_blocks_sharing_on_sparse_path():
+    spec = GroupSpec(n_agents=4, threshold=100, minibatch=1,
+                     m_pieces=8, topology="random_k", degree=2)
+    gs = _run_id_stamped_group(spec, epochs=4)
+    assert not bool(np.asarray(gs.stores.valid).any())
+
+
+# ----------------------------------------------------------------------
+# eq. 4 over sparse stores (hypothesis)
+# ----------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 12),
+       st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_eq4_weights_sum_to_one_over_sparse_store(seed, n, k):
+    """Deliver over a random_k topology, then eq. 4 over each store's
+    (sparsely populated) slots: weights are non-negative, zero on
+    invalid slots, and sum to 1 wherever any piece is valid."""
+    k = min(k, n)
+    topo = T.random_k(n, k, seed=seed % 10_000)
+    params = {"w": jnp.zeros((2,))}
+    flight = K.make_sparse_inflight(params, topo, max_delay=0)
+    stores = jax.vmap(lambda _: K.make_store(params, 4))(jnp.arange(n))
+    rng = np.random.default_rng(seed)
+    epochs = int(rng.integers(1, 4))
+    for e in range(epochs):
+        pieces = {"w": jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)}
+        Tw = jnp.asarray(rng.uniform(0.5, 9, (n,)), jnp.float32)
+        flight = K.sparse_send(flight, topo, pieces, Tw, e, True)
+        flight, stores = K.sparse_deliver(flight, stores, e)
+    Tm = np.asarray(stores.T)
+    Rm = np.asarray(stores.R)
+    valid = np.asarray(stores.valid)
+    for i in range(n):
+        w = np.asarray(eq4_weights(jnp.asarray(Tm[i]), jnp.asarray(Rm[i]),
+                                   jnp.asarray(valid[i])))
+        assert (w >= 0).all()
+        assert (w[~valid[i]] == 0).all()
+        if valid[i].any():
+            np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+        else:
+            assert w.sum() == 0.0
+
+
+# ----------------------------------------------------------------------
+# streaming trainer: segment-sum combine
+# ----------------------------------------------------------------------
+def _rand_knowledge(rng, A, p):
+    return Knowledge(
+        tg={"w": jnp.asarray(rng.normal(size=(A, p)), jnp.float32)},
+        tsum=jnp.asarray(rng.uniform(1, 3, A), jnp.float32),
+        rg={"w": jnp.asarray(rng.normal(size=(A, p)), jnp.float32)},
+        rsum=jnp.asarray(rng.uniform(1, 3, A), jnp.float32),
+    )
+
+
+def test_combine_topo_full_matches_global_sum():
+    rng = np.random.default_rng(0)
+    know = _rand_knowledge(rng, 4, 7)
+    g_uniform = _combine(know, jnp.ones((4, 4)), uniform=True)
+    g_topo = _combine_topo(know, T.full(4))
+    np.testing.assert_allclose(np.asarray(g_uniform["w"]),
+                               np.asarray(g_topo["w"]), rtol=1e-5)
+
+
+def test_combine_topo_is_neighbor_local():
+    rng = np.random.default_rng(1)
+    A, p = 5, 3
+    know = _rand_knowledge(rng, A, p)
+    g = np.asarray(_combine_topo(know, T.ring(A))["w"])
+    tg = np.asarray(know.tg["w"])
+    rg = np.asarray(know.rg["w"])
+    for i in range(A):
+        nb = sorted({(i - 1) % A, i, (i + 1) % A})
+        t = sum(tg[j] for j in nb) / sum(float(know.tsum[j]) for j in nb)
+        r = sum(rg[j] for j in nb) / sum(float(know.rsum[j]) for j in nb)
+        np.testing.assert_allclose(g[i], 0.5 * (t + r), rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_streaming_ring_topology_trains():
+    """End-to-end: the streaming trainer share-steps over a ring
+    without NaNs and with per-agent loss movement."""
+    from repro import optim
+    from repro.configs import get_arch_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import init_train_state, make_group_train_step
+    from repro.data import StreamSpec, make_group_batch
+
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    spec = GroupSpec(n_agents=4, threshold=0, minibatch=1,
+                     topology="ring", knowledge_mode="streaming")
+    opt = optim.sgd(0.1)
+    state = init_train_state(cfg, spec, opt, jax.random.PRNGKey(0))
+    shape = ShapeConfig("t", 32, 4, "train")
+    step = jax.jit(make_group_train_step(cfg, spec, opt))
+    losses = []
+    for i in range(3):
+        batch = make_group_batch(cfg, shape, StreamSpec(), 4, i)
+        state, m = step(state, batch)
+        assert bool(jnp.isfinite(m["loss"]).all())
+        losses.append(np.asarray(m["loss"]))
+    assert not np.allclose(losses[0], losses[-1])
