@@ -6,21 +6,34 @@ O(n·k·D). This sweep runs the real DDAL loop (toy quadratic agents so
 agent compute is negligible and the exchange dominates) over
 n ∈ {4, 16, 64, 256} × topology and reports per-epoch wall time plus
 the *actual* delay-line footprint (measured from the SparseInFlight
-pytree) next to the dense-equivalent footprint.
+pytree) next to the dense-equivalent footprint. ``dynamic_k`` rows
+resample the gossip table every 5 epochs inside the jitted loop
+(``GroupSpec.resample_every``) — same (n, k, D) delay-line shape as
+static ``random_k``, so their memory must match exactly.
 
 Acceptance targets (ISSUE 1): n=64 with random_k(k=4) must beat the
 dense n=16 epoch time on CPU, and its delay-line bytes must be < 10%
-of the dense n=64 equivalent.
+of the dense n=64 equivalent. (ISSUE 2): n=64 dynamic_k delay-line
+bytes must equal static random_k's.
 
-    PYTHONPATH=src python benchmarks/bench_topology_scaling.py [--smoke]
+``--hetero`` adds the adaptive-wiring ablation: a heterogeneous
+CartPole + GridWorld DDA3C group (obs padded to a shared space),
+sweeping static vs dynamic gossip × uniform vs learned (grad-cosine)
+relevance, reporting per-env mean return and the learned
+within-env / cross-env relevance split.
+
+    PYTHONPATH=src python benchmarks/bench_topology_scaling.py \
+        [--smoke] [--hetero]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import GroupSpec
 from repro.core import DDAL
@@ -121,10 +134,15 @@ def bench_dense_seed(n: int, n_params: int, epochs: int,
 
 def _sparse_thunk(n: int, topology: str, degree: int, n_params: int,
                   epochs: int, max_delay: int, minibatch: int,
-                  m_pieces: int = 8):
+                  m_pieces: int = 8, resample_every: int = 0):
+    name = "random_k" if topology == "dynamic_k" else topology
+    if name == "random_k":
+        degree = min(degree, n - 1)    # gossip degree must be < n
     spec = GroupSpec(n_agents=n, threshold=0, minibatch=minibatch,
-                     m_pieces=m_pieces, topology=topology,
-                     degree=degree, max_delay=max_delay)
+                     m_pieces=m_pieces, topology=name,
+                     degree=degree, max_delay=max_delay,
+                     resample_every=(resample_every
+                                     if topology == "dynamic_k" else 0))
     ddal, gs = make_toy_group(spec, n_params)
     run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
     key = jax.random.PRNGKey(1)
@@ -155,9 +173,11 @@ def acceptance_pair(n_params: int, epochs: int, max_delay: int,
 
 
 def bench_one(n: int, topology: str, degree: int, n_params: int,
-              epochs: int, max_delay: int, minibatch: int = 5) -> dict:
+              epochs: int, max_delay: int, minibatch: int = 5,
+              resample_every: int = 5) -> dict:
     thunk, ddal, gs = _sparse_thunk(n, topology, degree, n_params,
-                                    epochs, max_delay, minibatch)
+                                    epochs, max_delay, minibatch,
+                                    resample_every=resample_every)
     epoch_ms = _time_min(thunk, epochs)
     fb = flight_bytes(gs.flight)
     db = dense_equiv_bytes(n, ddal.max_delay, n_params)
@@ -168,10 +188,120 @@ def bench_one(n: int, topology: str, degree: int, n_params: int,
     }
 
 
+# ---------------------------------------------------------------------
+# heterogeneous CartPole/GridWorld adaptive-wiring ablation
+# ---------------------------------------------------------------------
+_OBS_DIM, _N_ACT, _MAX_STEPS = 25, 4, 100
+
+
+@dataclasses.dataclass(frozen=True)
+class _Padded:
+    """Lift an env into the shared (obs_dim=25, n_actions=4) space so
+    CartPole and GridWorld agents can share one vmapped network:
+    observations zero-padded, surplus actions folded back with a
+    modulus. Bench-local scaffolding, not a library env."""
+    inner: object
+    obs_dim: int = _OBS_DIM
+    n_actions: int = _N_ACT
+    max_steps: int = _MAX_STEPS
+
+    def _pad(self, o):
+        return jnp.pad(o, (0, self.obs_dim - o.shape[0]))
+
+    def reset(self, key):
+        return self.inner.reset(key)
+
+    def obs(self, s):
+        return self._pad(self.inner.obs(s))
+
+    def step(self, s, a):
+        ns, o, r, d = self.inner.step(s, a % self.inner.n_actions)
+        return ns, self._pad(o), r, d
+
+
+def bench_hetero(n: int, epochs: int, degree: int,
+                 resample_every: int, relevance_mode: str,
+                 seed: int = 0) -> dict:
+    """One cell of the adaptive-wiring ablation: n/2 CartPole + n/2
+    GridWorld A2C agents gossiping over random_k(degree), static or
+    dynamic, uniform or learned relevance. Returns per-env tail mean
+    return and the learned within-env vs cross-env relevance means."""
+    from repro import optim
+    from repro.rl import a2c_loss, networks as nets
+    from repro.rl.envs import CartPole, GridWorld
+    from repro.rl.rollout import episode_return, run_episode
+
+    cart = _Padded(CartPole())
+    grid = _Padded(GridWorld(max_steps=_MAX_STEPS))
+    opt = optim.adamw(3e-3)
+    spec = GroupSpec(n_agents=n, threshold=min(20, max(1, epochs // 2)),
+                     minibatch=5, m_pieces=16, topology="random_k",
+                     degree=min(degree, n - 1),
+                     resample_every=resample_every,
+                     relevance_mode=relevance_mode)
+
+    def gen(state, key):
+        params = state["params"]
+
+        def ep(env):
+            def run(k):
+                def select(obs, kk):
+                    return jax.random.categorical(
+                        kk, nets.policy_logits(params, obs))
+                return run_episode(env, select, k)
+            return run
+
+        traj = jax.lax.cond(state["env_id"] == 0, ep(cart), ep(grid),
+                            key)
+        loss, grads = jax.value_and_grad(a2c_loss)(params, traj, 0.99)
+        return grads, {"return": episode_return(traj)}, state
+
+    def app(state, g):
+        params, opt_state = opt.update(g, state["opt"], state["params"],
+                                       state["step"])
+        return {**state, "params": params, "opt": opt_state,
+                "step": state["step"] + 1}
+
+    key = jax.random.PRNGKey(seed)
+    k_init, k_run = jax.random.split(key)
+    params0 = jax.vmap(
+        lambda k: nets.init_policy_value(k, _OBS_DIM, _N_ACT, 64))(
+        jax.random.split(k_init, n))
+    env_id = (jnp.arange(n) % 2).astype(jnp.int32)   # interleaved
+    states = {"params": params0,
+              "opt": jax.vmap(opt.init)(params0),
+              "step": jnp.zeros((n,), jnp.int32),
+              "env_id": env_id}
+    ddal = DDAL(spec, gen, app, lambda s: s["params"])
+    gs = ddal.init(states)
+    gs, metrics = jax.jit(lambda g, k: ddal.run(g, k, epochs))(
+        gs, k_run)
+    rets = np.asarray(metrics["return"])             # (epochs, n)
+    tail = rets[-max(1, epochs // 4):]
+    same = np.equal.outer(np.asarray(env_id), np.asarray(env_id))
+    rel = np.asarray(gs.relevance)
+    off = ~np.eye(n, dtype=bool)
+    return {
+        "resample": resample_every, "relevance": relevance_mode,
+        "cart_ret": float(tail[:, ::2].mean()),
+        "grid_ret": float(tail[:, 1::2].mean()),
+        "rel_within": float(rel[same & off].mean()),
+        "rel_cross": float(rel[~same].mean()),
+    }
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
                    help="CI fast path: n ≤ 16, few epochs")
+    p.add_argument("--hetero", action="store_true",
+                   help="run the heterogeneous CartPole/GridWorld "
+                        "static-vs-dynamic × uniform-vs-learned "
+                        "relevance ablation")
+    p.add_argument("--hetero-epochs", type=int, default=None,
+                   help="epochs per hetero ablation cell")
+    p.add_argument("--resample-every", type=int, default=5,
+                   help="dynamic_k gossip resample period")
     p.add_argument("--params", type=int, default=4096,
                    help="toy agent parameter count")
     p.add_argument("--epochs", type=int, default=None,
@@ -184,7 +314,8 @@ def main(argv=None):
 
     sizes = [4, 16] if args.smoke else [4, 16, 64, 256]
     epochs = args.epochs or (5 if args.smoke else 20)
-    topologies = ["full", "ring", "torus2d", "random_k", "hierarchical"]
+    topologies = ["full", "ring", "torus2d", "random_k", "dynamic_k",
+                  "hierarchical"]
 
     # head-to-head acceptance measurement FIRST, before the sweep
     # pollutes the allocator/caches: interleaved best-of-N so load
@@ -219,10 +350,12 @@ def main(argv=None):
             if topo == "full" and n > 64:
                 continue
             show(bench_one(n, topo, args.degree, args.params, epochs,
-                           args.max_delay, args.minibatch))
+                           args.max_delay, args.minibatch,
+                           resample_every=args.resample_every))
 
     by = {(r["n"], r["topology"]): r for r in rows}
     gossip64 = by.get((64, "random_k"))
+    dyn64 = by.get((64, "dynamic_k"))
     if head is not None and gossip64:
         t_d, t_s = head
         ok_t = t_s < t_d
@@ -233,6 +366,29 @@ def main(argv=None):
         print(f"acceptance: n=64/k={args.degree} delay-line memory "
               f"{gossip64['mem_ratio']:.1%} of dense n=64 equivalent "
               f"→ {'PASS' if ok_m else 'FAIL'}")
+    if gossip64 and dyn64:
+        ok_d = dyn64["flight_mb"] == gossip64["flight_mb"]
+        print(f"acceptance: n=64 dynamic_k delay-line "
+              f"{dyn64['flight_mb']:.2f} MB == static random_k "
+              f"{gossip64['flight_mb']:.2f} MB → "
+              f"{'PASS' if ok_d else 'FAIL'}")
+
+    if args.hetero or args.smoke:
+        h_epochs = args.hetero_epochs or (10 if args.smoke else 400)
+        n_h = 8
+        print(f"\nheterogeneous CartPole/GridWorld group (n={n_h}, "
+              f"{h_epochs} epochs/cell):")
+        print(f"{'gossip':>8} {'relevance':>10} {'cart ret':>9} "
+              f"{'grid ret':>9} {'R within':>9} {'R cross':>8}")
+        for resample in (0, args.resample_every):
+            for mode in ("uniform", "grad_cos"):
+                r = bench_hetero(n_h, h_epochs, args.degree, resample,
+                                 mode)
+                rows.append({"n": n_h, "topology": "hetero", **r})
+                gossip = "static" if resample == 0 else "dynamic"
+                print(f"{gossip:>8} {mode:>10} {r['cart_ret']:9.2f} "
+                      f"{r['grid_ret']:9.3f} {r['rel_within']:9.3f} "
+                      f"{r['rel_cross']:8.3f}")
     return rows
 
 

@@ -190,7 +190,14 @@ LONG_CONTEXT_WINDOW = 8_192
 
 @dataclass(frozen=True)
 class GroupSpec:
-    """DDAL group-agent training configuration (paper §5)."""
+    """DDAL group-agent training configuration (paper §5).
+
+    Invalid combinations raise ``ValueError`` at construction (they
+    used to surface as shape/index errors deep inside jit): unknown
+    ``topology`` / ``relevance_mode`` strings, ``resample_every < 0``,
+    and ``degree >= n_agents`` for ``random_k`` (the gossip degree
+    counts the self-loop; k = n is spelled ``topology="full"``).
+    """
     n_agents: int = 1
     threshold: int = 1_000       # warm-up epochs of independent learning
     minibatch: int = 100         # share/update cadence (paper's name)
@@ -203,6 +210,43 @@ class GroupSpec:
     topology: str = "full"
     degree: int = 4              # k for random_k; pod size for hierarchical
     topology_seed: int = 0       # seed for random_k gossip sampling
+    resample_every: int = 0      # dynamic gossip: resample the random_k
+                                 # table every N epochs (0 = static)
     max_delay: int = 0           # async staleness simulation (epochs)
     t_weighting: str = "epochs"  # T_j source
     r_weighting: str = "uniform" # R_j source (paper §6 uses uniform)
+    relevance_mode: str = "uniform"  # online R estimator: uniform |
+                                     # grad_cos (repro.core.relevance)
+    relevance_ema: float = 0.9   # EMA decay of the learned R estimate
+
+    def __post_init__(self):
+        # deferred imports: repro.core modules import this module for
+        # the dataclass, so the name tables must resolve lazily.
+        from repro.core.relevance import RELEVANCE_MODES
+        from repro.core.topology import TOPOLOGIES
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology {self.topology!r}; expected one of "
+                f"{TOPOLOGIES}")
+        if self.relevance_mode not in RELEVANCE_MODES:
+            raise ValueError(
+                f"unknown relevance_mode {self.relevance_mode!r}; "
+                f"expected one of {RELEVANCE_MODES}")
+        if self.resample_every < 0:
+            raise ValueError(
+                f"resample_every must be >= 0, got {self.resample_every}")
+        if self.resample_every > 0 and self.topology != "random_k":
+            raise ValueError(
+                f"resample_every > 0 needs topology='random_k', got "
+                f"{self.topology!r}")
+        if self.topology == "random_k":
+            if not 1 <= self.degree < max(self.n_agents, 2):
+                raise ValueError(
+                    f"random_k degree must satisfy 1 <= degree < "
+                    f"n_agents (self-loop included; use topology="
+                    f"'full' for k = n), got degree={self.degree} "
+                    f"with n_agents={self.n_agents}")
+        if not 0.0 <= self.relevance_ema < 1.0:
+            raise ValueError(
+                f"relevance_ema must be in [0, 1), got "
+                f"{self.relevance_ema}")

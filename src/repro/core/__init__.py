@@ -19,18 +19,28 @@ from repro.core.sharded_ddal import (  # noqa: F401
     make_group_train_step,
     train_state_specs,
 )
+from repro.core.relevance import (  # noqa: F401
+    RELEVANCE_MODES,
+    grad_cosine,
+    obs_overlap,
+)
 from repro.core.topology import (  # noqa: F401
     TOPOLOGIES,
+    DynamicTopology,
     Topology,
+    delay_from_hops,
     full,
     hierarchical,
+    hop_distances,
     make_topology,
     random_k,
     ring,
+    sample_gossip,
     star,
     torus2d,
 )
 from repro.core.weighting import (  # noqa: F401
+    combine_relevance,
     eq4_weights,
     relevance_matrix,
     training_experience,

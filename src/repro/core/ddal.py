@@ -25,10 +25,19 @@ each destination gathers pieces from its in-neighbors through a
 neighbor-indexed ``SparseInFlight`` delay line — O(n·k·D) memory — and
 the dense all-to-all of the seed is recovered exactly by the ``full``
 topology (k = n).
+
+The graph itself can be adaptive (ISSUE 2): with
+``spec.resample_every > 0`` the gossip table is a
+``repro.core.topology.DynamicTopology`` resampled inside the jitted
+epoch loop, and with ``spec.relevance_mode="grad_cos"`` the per-edge
+relevance fed to eq. 4 is learned online from gradient cosine
+similarity (``repro.core.relevance``), EMA-smoothed over share steps.
+Both default off, in which case the epoch step is bitwise-identical
+to the static path.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +45,13 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_map
 from repro.configs.base import GroupSpec
 from repro.core import knowledge as K
-from repro.core.topology import Topology, make_topology
-from repro.core.weighting import training_experience
+from repro.core import relevance as REL
+from repro.core.topology import (
+    DynamicTopology,
+    Topology,
+    make_topology,
+)
+from repro.core.weighting import combine_relevance, training_experience
 
 
 class GroupState(NamedTuple):
@@ -45,6 +59,9 @@ class GroupState(NamedTuple):
     stores: K.KnowledgeStore   # leading (n,)
     flight: K.SparseInFlight
     epoch: jnp.ndarray         # () int32
+    relevance: jnp.ndarray     # (n, n) learned R EMA (ones = uniform)
+    nbr: jnp.ndarray           # (n, k) current gossip table (static
+                               # topologies carry it untouched)
 
 
 def _tree_select(pred, a, b):
@@ -63,25 +80,52 @@ class DDAL:
                  apply_grads: Callable, params_of: Callable,
                  relevance: Optional[jnp.ndarray] = None,
                  delay: Optional[jnp.ndarray] = None,
-                 topology: Optional[Topology] = None,
+                 topology: Optional[Union[Topology,
+                                          DynamicTopology]] = None,
                  use_wavg_kernel: bool = False):
-        """``topology`` overrides the graph named by ``spec.topology``;
+        """``topology`` overrides the graph named by ``spec.topology``
+        (a ``DynamicTopology`` makes the gossip table time-varying);
         ``relevance`` / ``delay`` accept either dense (n, n) src→dst
         matrices (seed-compatible) or per-edge (n, k) arrays and are
-        attached onto the topology's edge table."""
+        attached onto the topology's edge table — dynamic topologies
+        accept only the dense (or scalar delay) forms, which are
+        re-gathered after every resample."""
         self.spec = spec
         self.gen_grads = gen_grads
         self.apply_grads = apply_grads
         self.params_of = params_of       # agent_state -> params pytree
         if topology is None:
-            topology = make_topology(spec)
-        if relevance is not None:
-            topology = topology.with_relevance(relevance)
-        if delay is not None:
-            topology = topology.with_delay(delay)
+            topology = make_topology(spec, delay=delay,
+                                     relevance=relevance)
+            relevance = delay = None     # consumed by make_topology
+        if isinstance(topology, DynamicTopology):
+            topology = topology.with_dense(delay=delay,
+                                           relevance=relevance)
+            if topology.dense_delay is None:
+                topology._uniform_base_delay()   # validate early, not in jit
+            self.static_topology = topology.base
+        else:
+            if relevance is not None:
+                topology = topology.with_relevance(relevance)
+            if delay is not None:
+                topology = topology.with_delay(delay)
+            self.static_topology = topology
         self.topology = topology
+        self.dynamic = isinstance(topology, DynamicTopology)
         self.max_delay = max(topology.max_delay, spec.max_delay)
         self.use_wavg_kernel = use_wavg_kernel
+
+    # ------------------------------------------------------------------
+    def _topology_at(self, epoch, nbr):
+        """(topology in force at ``epoch``, carried gossip table).
+        Dynamic topologies refresh the table only at resample-round
+        boundaries (a ``lax.cond`` over the tiny (n, k) table — the
+        O(n² log n) sampler is skipped on off-boundary epochs)."""
+        if not self.dynamic or self.topology.resample_every <= 0:
+            return self.static_topology if self.dynamic \
+                else self.topology, nbr
+        nbr = self.topology.refresh_table(epoch, nbr)
+        return self.topology.with_table(nbr), nbr
 
     # ------------------------------------------------------------------
     def init(self, agent_states) -> GroupState:
@@ -91,11 +135,14 @@ class DDAL:
         stores = jax.vmap(lambda _: K.make_store(params0,
                                                  self.spec.m_pieces))(
             jnp.arange(n))
-        flight = K.make_sparse_inflight(params0, self.topology,
+        flight = K.make_sparse_inflight(params0, self.static_topology,
                                         self.max_delay)
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
-                          epoch=jnp.zeros((), jnp.int32))
+                          epoch=jnp.zeros((), jnp.int32),
+                          relevance=REL.init_relevance(n),
+                          nbr=jnp.asarray(self.static_topology.nbr,
+                                          jnp.int32))
 
     # ------------------------------------------------------------------
     def epoch_step(self, gs: GroupState, keys) -> Tuple[GroupState, Any]:
@@ -109,13 +156,29 @@ class DDAL:
         warmup = epoch < spec.threshold
         sharing = jnp.logical_not(warmup)
 
+        # --- adaptive wiring: resample gossip, learn relevance --------
+        topo, nbr = self._topology_at(epoch, gs.nbr)
+        learned = gs.relevance
+        if spec.relevance_mode != "uniform":
+            # EMA over share steps only (warm-up holds the prior);
+            # effective R = static edge prior × learned estimate.
+            learned = REL.update_relevance(learned, grads,
+                                           spec.relevance_mode,
+                                           spec.relevance_ema, sharing)
+            eff = combine_relevance(topo.relevance,
+                                    REL.gather_edges(learned, topo.nbr))
+            topo = topo._replace(
+                relevance=jnp.where(topo.mask, eff, 0.0))
+
         # --- lines 8–10: append + async exchange over the graph -------
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
                              (n,))
-        flight = K.sparse_send(gs.flight, self.topology, grads, T,
+        flight = K.sparse_send(gs.flight, topo, grads, T,
                                epoch, sharing)
+        # the delivery fast-path hint needs only static facts (mask,
+        # delay, m % k) — valid whatever the traced nbr table says
         flight, stores = K.sparse_deliver(flight, gs.stores, epoch,
-                                          self.topology)
+                                          self.static_topology)
 
         # --- lines 5–6 / 11–14: one update per epoch ------------------
         # warm-up: own grads every epoch; sharing: the eq. 4 average
@@ -145,7 +208,8 @@ class DDAL:
             branch, (hold, independent, group_update), astates)
 
         new_gs = GroupState(agent_states=astates, stores=stores,
-                            flight=flight, epoch=epoch + 1)
+                            flight=flight, epoch=epoch + 1,
+                            relevance=learned, nbr=nbr)
         return new_gs, metrics
 
     # ------------------------------------------------------------------

@@ -14,6 +14,12 @@ Two delay-line layouts exist:
   (D+1 delivery planes + 1 scratch), O(n·k·D) memory, send/deliver
   are gather/scatter over the neighbor table. The ``full`` topology
   (k = n, slot j ↔ source j) reproduces the dense semantics bitwise.
+  The table may be *traced* (dynamic gossip,
+  ``repro.core.topology.DynamicTopology``): both the uniform-delay
+  plane-write fast path and the heterogeneous-delay one-hot path
+  consume a traced ``nbr`` / ``delay`` / ``relevance`` — only
+  *static* facts (mask pattern, delay uniformity) pick the path, so
+  resampling the edges never changes the compiled program shape.
 * ``InFlight`` (dense reference) — the seed's all-to-all layout with
   (n_dst, D+1, n_src, *param) leaves, O(n²·D) memory. Kept as the
   oracle for the dense-vs-sparse equivalence tests.
@@ -166,7 +172,11 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
 
     pieces: pytree leaves (n, ...); T: (n,) training experience of the
     sources; per-edge relevance/delay come from ``topo``; enabled:
-    scalar bool (sharing started).
+    scalar bool (sharing started). ``topo`` may carry traced arrays
+    (a resampled gossip table, learned relevance): the gathers/writes
+    below are trace-polymorphic, and a traced ``delay`` simply takes
+    the general one-hot path (delay-plane choice can then differ per
+    edge and per epoch).
     """
     n, k, planes = flight.T.shape
     D1 = planes - 1                    # last plane = disabled scratch

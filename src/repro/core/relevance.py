@@ -1,0 +1,134 @@
+"""Learned per-edge relevance R for DDAL's eq. 4 weighting.
+
+The paper sets R uniform for homogeneous groups (§6); the
+heterogeneous-agents follow-up (arXiv 2501.11818) shows that when
+agents face *different* tasks, a uniform prior weights misleading
+knowledge the same as useful knowledge. This module estimates
+relevance **online** instead of wiring it statically:
+
+* ``grad_cosine`` — instantaneous src→dst relevance from the cosine
+  similarity of the agents' gradient directions: agents descending the
+  same loss landscape produce aligned gradients, agents on unrelated
+  tasks produce near-orthogonal (cos ≈ 0) or conflicting (cos < 0)
+  ones. Mapped to [min_rel, 1] by ``to_relevance`` and smoothed with
+  an EMA over share steps (``ema_update``), this is the
+  ``relevance_mode="grad_cos"`` estimator threaded through
+  ``repro.core.ddal.DDAL`` and the streaming trainer's
+  ``_combine_topo`` segment-sum.
+* ``obs_overlap`` — a *static* prior from observation statistics: the
+  Gaussian overlap of two agents' observation distributions (running
+  mean/scale), for callers that can summarise their input streams.
+  Attach it via ``Topology.with_relevance`` / the ``relevance=``
+  argument of the group entry points.
+
+Estimates are kept as dense (n, n) ``R[src, dst]`` matrices — O(n²)
+*scalars*, negligible next to the O(n·k·D·|params|) delay line — so
+they survive ``DynamicTopology`` resampling; ``gather_edges`` projects
+them onto the current (n, k) edge table. The effective per-edge
+relevance is the product of the topology's static prior and the
+learned estimate (``repro.core.weighting.combine_relevance``), so
+``relevance_mode="uniform"`` (learned factor ≡ 1) reproduces the
+static eq. 4 weights exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Modes GroupSpec.relevance_mode accepts. "obs_overlap" is a static
+# prior (no online signal reaches the trainers), so the online
+# estimators are uniform | grad_cos.
+RELEVANCE_MODES = ("uniform", "grad_cos")
+
+
+def flatten_agents(grads) -> jnp.ndarray:
+    """Concatenate a pytree with leading (n,) agent axis into an
+    (n, P) matrix of flattened per-agent vectors."""
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    return jnp.concatenate(
+        [jnp.reshape(x, (n, -1)).astype(jnp.float32) for x in leaves],
+        axis=1)
+
+
+def grad_cosine(grads, eps: float = 1e-8) -> jnp.ndarray:
+    """Pairwise cosine similarity of per-agent gradients.
+
+    grads: pytree with leading (n,) axis. Returns a symmetric (n, n)
+    matrix ``C[src, dst] ∈ [-1, 1]`` with ones on the diagonal (an
+    agent's own knowledge is always fully relevant to itself); an
+    all-zero gradient row yields cosine 0 against everyone else.
+    """
+    g = flatten_agents(grads)                          # (n, P)
+    norm = jnp.sqrt(jnp.sum(g * g, axis=1))            # (n,)
+    gn = g / jnp.maximum(norm, eps)[:, None]
+    c = jnp.clip(gn @ gn.T, -1.0, 1.0)
+    n = c.shape[0]
+    return jnp.where(jnp.eye(n, dtype=bool), 1.0, c)
+
+
+def to_relevance(cos, min_rel: float = 1e-3) -> jnp.ndarray:
+    """Map cosine similarity [-1, 1] onto a relevance weight
+    [min_rel, 1]: ``R = (1 + cos) / 2``, floored so a piece is
+    down-weighted by conflict, never silently discarded (eq. 4
+    renormalises, so the floor keeps every delivered piece's weight
+    finite and nonzero)."""
+    return jnp.clip(0.5 * (1.0 + cos), min_rel, 1.0)
+
+
+def ema_update(prev, obs, decay, enabled=True) -> jnp.ndarray:
+    """EMA over share steps: ``decay·prev + (1−decay)·obs`` where
+    ``enabled`` (a traced bool is fine), ``prev`` elsewhere — warm-up
+    epochs hold the estimate at its prior."""
+    new = decay * prev + (1.0 - decay) * obs
+    return jnp.where(jnp.asarray(enabled), new, prev)
+
+
+def gather_edges(dense, nbr) -> jnp.ndarray:
+    """Project a dense (n, n) ``X[src, dst]`` matrix onto an (n, k)
+    edge table: ``out[i, j] = X[nbr[i, j], i]``. Works with a traced
+    ``nbr`` (dynamic topologies)."""
+    n = dense.shape[0]
+    dst = jnp.arange(n)[:, None]
+    return dense[nbr, dst]
+
+
+def init_relevance(n: int) -> jnp.ndarray:
+    """The uniform prior every estimator starts from (and the fixed
+    point of ``relevance_mode="uniform"``)."""
+    return jnp.ones((n, n), jnp.float32)
+
+
+def update_relevance(rel, grads, mode: str, decay: float,
+                     enabled=True) -> jnp.ndarray:
+    """One online step of the (n, n) relevance estimate: a no-op for
+    ``"uniform"``, an EMA toward the current gradient-cosine relevance
+    for ``"grad_cos"``."""
+    if mode == "uniform":
+        return rel
+    if mode == "grad_cos":
+        return ema_update(rel, to_relevance(grad_cosine(grads)),
+                          decay, enabled)
+    raise ValueError(
+        f"unknown relevance mode {mode!r}; expected one of "
+        f"{RELEVANCE_MODES}")
+
+
+def obs_overlap(mean, scale, eps: float = 1e-6) -> jnp.ndarray:
+    """Static relevance prior from observation statistics: treating
+    each agent's observation stream as an isotropic Gaussian with the
+    given per-agent ``mean`` (n, d) and ``scale`` (n,) (std), return
+    the (n, n) Gaussian-overlap matrix
+
+        R[i, j] = exp( −|μ_i − μ_j|² / (2 (σ_i² + σ_j²)) )
+
+    — 1 for identical streams, → 0 as they separate. Symmetric with a
+    unit diagonal; use via ``Topology.with_relevance`` or the
+    ``relevance=`` argument of the group entry points."""
+    mean = jnp.asarray(mean, jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    d2 = jnp.sum(
+        jnp.square(mean[:, None, :] - mean[None, :, :]), axis=-1)
+    var = jnp.square(scale)
+    denom = jnp.maximum(2.0 * (var[:, None] + var[None, :]), eps)
+    return jnp.exp(-d2 / denom)

@@ -28,18 +28,33 @@ segment-sum on the static edge list instead of a global all-reduce —
 O(|E|) cross-pod traffic instead of O(A²) — and both eq. 4
 normalisations (T and R) become neighbor-local. The ``full`` + uniform
 case keeps the cheaper global-sum fast path.
+
+Adaptive wiring (ISSUE 2): a ``DynamicTopology``
+(``spec.resample_every > 0``) resamples the gossip edge list inside
+the jitted step — the segment-sum consumes the traced table directly
+— and ``spec.relevance_mode="grad_cos"`` learns per-edge relevance
+from the cosine similarity of the agents' *window-accumulated*
+gradients (``Knowledge.rg``, already a temporal average over the
+share window), EMA-smoothed across share steps in ``Knowledge.rel``
+(``repro.core.relevance``). Both default off; the static path is
+untouched.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import tree_map, tree_zeros_like
 from repro.configs.base import ArchConfig, GroupSpec
-from repro.core.topology import Topology, make_topology
-from repro.core.weighting import relevance_matrix, training_experience
+from repro.core import relevance as REL
+from repro.core.topology import DynamicTopology, Topology, make_topology
+from repro.core.weighting import (
+    combine_relevance,
+    relevance_matrix,
+    training_experience,
+)
 from repro.models import get_model
 from repro.optim import Optimizer
 
@@ -49,6 +64,7 @@ class Knowledge(NamedTuple):
     tsum: jnp.ndarray     # (A,)
     rg: Any
     rsum: jnp.ndarray     # (A,)
+    rel: Any = None       # (A, A) learned R EMA; None = uniform mode
 
 
 class TrainState(NamedTuple):
@@ -58,13 +74,16 @@ class TrainState(NamedTuple):
     step: jnp.ndarray     # () int32
 
 
-def init_knowledge(params, dtype=jnp.float32) -> Knowledge:
+def init_knowledge(params, dtype=jnp.float32, rel=None) -> Knowledge:
+    """Fresh (zeroed) share-window accumulators. ``rel`` is the learned
+    relevance EMA to carry across the window reset — it persists over
+    share steps, unlike the window sums."""
     A = jax.tree.leaves(params)[0].shape[0]
     acc = tree_map(lambda x: jnp.zeros(x.shape, jnp.dtype(dtype)),
                    params)
     return Knowledge(tg=acc, tsum=jnp.zeros((A,), jnp.float32),
                      rg=tree_zeros_like(acc),
-                     rsum=jnp.zeros((A,), jnp.float32))
+                     rsum=jnp.zeros((A,), jnp.float32), rel=rel)
 
 
 def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
@@ -74,9 +93,12 @@ def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
     keys = jax.random.split(key, spec.n_agents)
     params = jax.vmap(lambda k: model.init(cfg, k))(keys)
     opt_state = jax.vmap(opt.init)(params)
+    rel = (REL.init_relevance(spec.n_agents)
+           if spec.relevance_mode == "grad_cos" else None)
     return TrainState(params=params, opt_state=opt_state,
                       know=init_knowledge(params,
-                                          jnp.dtype(spec.knowledge_dtype)),
+                                          jnp.dtype(spec.knowledge_dtype),
+                                          rel=rel),
                       step=jnp.zeros((), jnp.int32))
 
 
@@ -173,22 +195,42 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
         def loss_fn(params, batch):        # noqa: F811
             return model.loss(cfg, params, batch)
     A = spec.n_agents
+    learn_rel = spec.relevance_mode == "grad_cos"
     # full + uniform keeps the global-sum fast path; any named sparse
     # topology (or an explicit Topology) takes the segment-sum path.
-    if topology is None and spec.topology != "full":
+    if topology is None and (spec.topology != "full"
+                             or spec.resample_every > 0):
         topology = make_topology(spec)
-    if topology is not None and relevance is not None:
+    if isinstance(topology, DynamicTopology):
+        if relevance is not None:
+            topology = topology.with_dense(relevance=relevance)
+    elif topology is not None and relevance is not None:
         topology = topology.with_relevance(relevance)
     uniform = (topology is None and relevance is None
-               and spec.r_weighting == "uniform")
+               and spec.r_weighting == "uniform" and not learn_rel)
     R = (relevance if relevance is not None
          else relevance_matrix(A, "uniform"))
 
+    def topo_at(step) -> Topology:
+        if isinstance(topology, DynamicTopology):
+            return topology.at_epoch(step)
+        return topology
+
     if topology is not None:
-        def combine(k2):
-            return _combine_topo(k2, topology)
+        def combine(k2, rel, step):
+            topo = topo_at(step)
+            if learn_rel:
+                eff = combine_relevance(
+                    topo.relevance, REL.gather_edges(rel, topo.nbr))
+                topo = topo._replace(
+                    relevance=jnp.where(topo.mask, eff, 0.0))
+            return _combine_topo(k2, topo)
     else:
-        def combine(k2):
+        def combine(k2, rel, step):
+            del step
+            if learn_rel:
+                return _combine(k2, combine_relevance(R, rel),
+                                uniform=False)
             return _combine(k2, R, uniform)
 
     vopt = jax.vmap(opt.update, in_axes=(0, 0, 0, None))
@@ -216,12 +258,21 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
             rg = tree_map(lambda a, g: a + g.astype(kdt),
                           know.rg, grads)
             k2 = Knowledge(tg=tg, tsum=know.tsum + T_t,
-                           rg=rg, rsum=know.rsum + 1.0)
+                           rg=rg, rsum=know.rsum + 1.0, rel=know.rel)
 
             def do_share(_):
-                gbar = combine(k2)
+                rel = k2.rel
+                if learn_rel:
+                    # window-accumulated grads are already a temporal
+                    # average over the share window — their cosine is
+                    # the per-window relevance observation.
+                    rel = REL.ema_update(
+                        rel, REL.to_relevance(REL.grad_cosine(k2.rg)),
+                        spec.relevance_ema)
+                gbar = combine(k2, rel, step)
                 p2, o2 = vopt(gbar, state.opt_state, state.params, step)
-                return p2, o2, init_knowledge(state.params, kdt)
+                return p2, o2, init_knowledge(state.params, kdt,
+                                              rel=rel)
 
             def hold(_):
                 return state.params, state.opt_state, k2

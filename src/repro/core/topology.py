@@ -22,12 +22,28 @@ strict subset.
 Every constructor includes the self-loop edge (an agent's own pieces
 always enter its own store K_i, paper Algorithm 1 line 8) with delay 0
 unless overridden.
+
+Two extensions make the wiring *adaptive* (ISSUE 2):
+
+* ``DynamicTopology`` — time-varying gossip (arXiv 1912.03821): the
+  ``random_k`` neighbor table is resampled every ``resample_every``
+  epochs inside the jitted loop, seeded by a fold of
+  ``(topology_seed, epoch // resample_every)`` so resampling is
+  deterministic and replayable. ``at_epoch`` returns a *traced*
+  ``Topology`` that ``sparse_send`` / ``sparse_deliver`` consume
+  directly; ``resample_every = 0`` degenerates to the static base
+  table (bitwise-identical to the static ``random_k`` path).
+* ``delay_from_hops`` — topology-aware delay models: per-edge delays
+  proportional to graph distance (hop count × latency) on an
+  underlying physical graph, so a piece from a distance-d agent
+  arrives exactly d·latency epochs later.
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -223,6 +239,216 @@ def hierarchical(n: int, pod_size: int = 4) -> Topology:
 
 
 # ---------------------------------------------------------------------
+# dynamic gossip (time-varying random_k)
+# ---------------------------------------------------------------------
+def sample_gossip(key, n: int, k: int) -> jnp.ndarray:
+    """Jit-traceable k-regular gossip table: for every destination,
+    edge slot 0 is the self-loop and slots 1..k-1 are k−1 distinct
+    uniformly-drawn other agents. Returns an (n, k) int32 ``nbr``
+    table; the mask is all-True (regular in-degree, no padding).
+
+    Sampling without replacement is an argsort over per-row uniforms
+    with the diagonal pushed past every real value — O(n² log n)
+    scalars, negligible next to the delay line, and fully traceable so
+    the table can be resampled *inside* the scanned epoch loop.
+    """
+    if not 1 <= k <= n:
+        raise ValueError(f"sample_gossip needs 1 <= k <= n, got k={k}")
+    u = jax.random.uniform(key, (n, n))
+    u = u + 2.0 * jnp.eye(n)            # self never among the draws
+    order = jnp.argsort(u, axis=1).astype(jnp.int32)   # (n, n)
+    self_col = jnp.arange(n, dtype=jnp.int32)[:, None]
+    return jnp.concatenate([self_col, order[:, :k - 1]], axis=1)
+
+
+class DynamicTopology(NamedTuple):
+    """Time-varying gossip graph: a static ``base`` (the
+    ``resample_every = 0`` limit, also fixing all shapes) plus the
+    resampling schedule. ``at_epoch(e)`` materialises the epoch's
+    ``Topology`` — a traced neighbor table when resampling, the base
+    table verbatim when not.
+
+    Per-edge annotations cannot survive a resample (the edge set
+    changes), so delays/relevance are carried as dense (n, n) src→dst
+    matrices (``dense_delay`` / ``dense_relevance``) and re-gathered
+    onto the fresh edge table each round; ``None`` means the base's
+    uniform delay / unit relevance.
+    """
+    base: Topology
+    resample_every: int
+    seed: int
+    dense_delay: Optional[jnp.ndarray] = None       # (n, n) src→dst
+    dense_relevance: Optional[jnp.ndarray] = None   # (n, n) src→dst
+
+    @property
+    def n_agents(self) -> int:
+        return self.base.n_agents
+
+    @property
+    def degree(self) -> int:
+        return self.base.degree
+
+    @property
+    def max_delay(self) -> int:
+        if self.dense_delay is not None:
+            return int(np.asarray(self.dense_delay).max())
+        return self.base.max_delay
+
+    def _uniform_base_delay(self) -> int:
+        d = np.asarray(self.base.delay)
+        if d.size and not (d == d.flat[0]).all():
+            raise ValueError(
+                "DynamicTopology needs a uniform base delay or a dense "
+                "(n, n) dense_delay matrix — per-edge delays cannot be "
+                "re-gathered after a resample")
+        return int(d.flat[0]) if d.size else 0
+
+    def with_dense(self, delay=None,
+                   relevance=None) -> "DynamicTopology":
+        """Attach delay / relevance in the only forms that survive a
+        resample: a scalar (uniform) delay or dense (n, n) src→dst
+        matrices. Shapes are validated here — a mis-shaped matrix
+        would otherwise be clamp-gathered into silently wrong weights
+        inside jit. Annotations are also attached to the static base
+        so the ``resample_every = 0`` limit carries them."""
+        n = self.n_agents
+        out = self
+        if delay is not None:
+            d = np.asarray(delay)
+            if d.ndim == 0:
+                out = out._replace(base=out.base.with_delay(delay),
+                                   dense_delay=None)
+            elif d.shape == (n, n):
+                out = out._replace(
+                    base=out.base.with_delay(delay),
+                    dense_delay=jnp.asarray(d, jnp.int32))
+            else:
+                raise ValueError(
+                    f"dynamic topology delay must be scalar or "
+                    f"({n},{n}) dense, got {d.shape}")
+        if relevance is not None:
+            r = np.asarray(relevance)
+            if r.shape != (n, n):
+                raise ValueError(
+                    f"dynamic topology relevance must be ({n},{n}) "
+                    f"dense, got {r.shape}")
+            out = out._replace(
+                base=out.base.with_relevance(relevance),
+                dense_relevance=jnp.asarray(r, jnp.float32))
+        return out
+
+    def round_table(self, epoch) -> jnp.ndarray:
+        """The (traced) gossip table of ``epoch``'s resample round:
+        ``sample_gossip`` keyed by
+        ``fold_in(PRNGKey(seed), epoch // resample_every)`` —
+        deterministic in ``(seed, epoch)`` and constant within a
+        round."""
+        n, k = self.base.nbr.shape
+        rnd = jnp.asarray(epoch, jnp.int32) // self.resample_every
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
+        return sample_gossip(key, n, k)
+
+    def refresh_table(self, epoch, nbr) -> jnp.ndarray:
+        """Carried-table refresh for scanned loops: resample only at
+        round boundaries (``epoch % resample_every == 0``), otherwise
+        keep ``nbr``. Equivalent to ``round_table(epoch)`` when
+        epochs are visited in order from 0, but skips the O(n² log n)
+        sampler on every off-boundary epoch (the table is tiny, so
+        the ``lax.cond`` copy is cheap — unlike the multi-MB flight,
+        which never enters a conditional)."""
+        if self.resample_every <= 0:
+            return nbr
+        boundary = (jnp.asarray(epoch, jnp.int32)
+                    % self.resample_every) == 0
+        return jax.lax.cond(
+            boundary,
+            lambda _: self.round_table(epoch),
+            lambda _: jnp.asarray(nbr, jnp.int32),
+            None)
+
+    def with_table(self, nbr) -> Topology:
+        """Materialise the epoch's ``Topology`` around a (possibly
+        traced) gossip table: all-True mask, dense annotations
+        re-gathered onto the fresh edges."""
+        n, k = self.base.nbr.shape
+        mask = jnp.ones((n, k), bool)
+        dst = jnp.arange(n)[:, None]
+        if self.dense_delay is not None:
+            delay = jnp.asarray(self.dense_delay, jnp.int32)[nbr, dst]
+        else:
+            delay = jnp.full((n, k), self._uniform_base_delay(),
+                             jnp.int32)
+        if self.dense_relevance is not None:
+            rel = jnp.asarray(self.dense_relevance,
+                              jnp.float32)[nbr, dst]
+        else:
+            rel = jnp.ones((n, k), jnp.float32)
+        return Topology(nbr=nbr, mask=mask, delay=delay, relevance=rel)
+
+    def at_epoch(self, epoch) -> Topology:
+        """The communication graph in force at ``epoch``. With
+        ``resample_every <= 0`` this is the static base — the exact
+        object, so the static-limit equivalence is structural, not
+        just numerical."""
+        if self.resample_every <= 0:
+            return self.base
+        return self.with_table(self.round_table(epoch))
+
+
+# ---------------------------------------------------------------------
+# topology-aware delay models
+# ---------------------------------------------------------------------
+def hop_distances(topo: Topology) -> np.ndarray:
+    """All-pairs directed hop count over the topology's edges
+    (``dist[src, dst]`` = fewest edges from src to dst; 0 on the
+    diagonal). Host-side BFS over the static table — raises on a
+    disconnected pair, which cannot be assigned a finite delay."""
+    n = topo.n_agents
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    # out[src] = destinations src feeds (edge src→dst when src ∈ nbr[dst])
+    out = [[] for _ in range(n)]
+    for dst in range(n):
+        for j in range(topo.degree):
+            if mask[dst, j]:
+                out[int(nbr[dst, j])].append(dst)
+    dist = np.full((n, n), -1, np.int64)
+    for s in range(n):
+        dist[s, s] = 0
+        frontier = [s]
+        d = 0
+        while frontier:
+            d += 1
+            nxt = []
+            for u in frontier:
+                for v in out[u]:
+                    if dist[s, v] < 0:
+                        dist[s, v] = d
+                        nxt.append(v)
+            frontier = nxt
+    if (dist < 0).any():
+        bad = np.argwhere(dist < 0)[0]
+        raise ValueError(
+            f"graph is not strongly connected: no path "
+            f"{int(bad[0])}→{int(bad[1])}; hop delays are undefined")
+    return dist
+
+
+def delay_from_hops(topo: Topology, latency: int = 1,
+                    graph: Optional[Topology] = None) -> Topology:
+    """Attach graph-distance delays: each edge of ``topo`` gets delay
+    ``hops(src→dst) · latency`` measured on ``graph`` (default:
+    ``topo`` itself), so knowledge from a distance-d agent is exactly
+    d·latency epochs stale on arrival. Pass a denser ``topo`` (e.g.
+    ``full``) over a sparse physical ``graph`` (e.g. ``ring``) to
+    model far-apart agents hearing each other late."""
+    if latency < 0:
+        raise ValueError(f"latency must be >= 0, got {latency}")
+    hops = hop_distances(topo if graph is None else graph)
+    return topo.with_delay(jnp.asarray(hops * latency, jnp.int32))
+
+
+# ---------------------------------------------------------------------
 # GroupSpec dispatch
 # ---------------------------------------------------------------------
 TOPOLOGIES = ("full", "ring", "torus2d", "star", "random_k",
@@ -238,10 +464,17 @@ def _torus_dims(n: int):
 
 
 def make_topology(spec, delay=None,
-                  relevance=None) -> Topology:
+                  relevance=None) -> "Topology | DynamicTopology":
     """Build the topology named by a ``GroupSpec`` (``topology``,
     ``degree``, ``topology_seed``), then attach optional dense or
-    per-edge ``delay`` / ``relevance`` overrides."""
+    per-edge ``delay`` / ``relevance`` overrides.
+
+    With ``spec.resample_every > 0`` (random_k only) the result is a
+    ``DynamicTopology`` whose gossip table resamples every
+    ``resample_every`` epochs; dense (n, n) ``delay`` / ``relevance``
+    overrides are then carried as matrices and re-gathered after each
+    resample (per-edge (n, k) overrides are rejected — they cannot
+    follow a changing edge set)."""
     n = spec.n_agents
     name = spec.topology
     if name == "full":
@@ -259,6 +492,16 @@ def make_topology(spec, delay=None,
     else:
         raise ValueError(
             f"unknown topology {name!r}; expected one of {TOPOLOGIES}")
+    resample = getattr(spec, "resample_every", 0)
+    if resample > 0:
+        if name != "random_k":
+            raise ValueError(
+                f"resample_every > 0 needs topology='random_k', "
+                f"got {name!r}")
+        return DynamicTopology(
+            base=topo, resample_every=resample,
+            seed=spec.topology_seed).with_dense(delay=delay,
+                                                relevance=relevance)
     if relevance is not None:
         topo = topo.with_relevance(relevance)
     if delay is not None:

@@ -45,6 +45,17 @@ def training_experience(epoch, mode: str = "epochs"):
     raise ValueError(f"unknown T mode {mode!r}")
 
 
+def combine_relevance(prior, learned):
+    """Effective relevance = static prior × learned online estimate,
+    elementwise. The prior encodes what is wired (topology support,
+    user-supplied R, e.g. ``repro.core.relevance.obs_overlap``); the
+    learned factor (``repro.core.relevance``) adapts it. A learned
+    factor of 1 — the ``relevance_mode="uniform"`` fixed point —
+    leaves the static eq. 4 weights exactly unchanged, which is the
+    equivalence oracle the tests pin."""
+    return prior * learned
+
+
 def relevance_matrix(n: int, mode: str = "uniform",
                      adjacency=None) -> jnp.ndarray:
     """R[j, i] = relevance of agent j's knowledge to agent i. The group

@@ -105,15 +105,21 @@ def cache_partition_specs(cfg: ArchConfig, shape: ShapeConfig,
 
 # -- TrainState (adamw layout) ----------------------------------------
 def train_state_partition_specs(cfg: ArchConfig, rules: dict,
-                                agent_axis: Axis) -> Any:
+                                agent_axis: Axis,
+                                learn_relevance: bool = False) -> Any:
     """Specs for repro.core.sharded_ddal.TrainState with an AdamW
-    optimiser (m/v mirror params; count/step are scalars)."""
+    optimiser (m/v mirror params; count/step are scalars). With
+    ``learn_relevance`` (``GroupSpec.relevance_mode="grad_cos"``) the
+    state carries the (A, A) learned relevance EMA — rows shard over
+    the agent axis like the other per-agent leaves."""
     from repro.core.sharded_ddal import Knowledge, TrainState
     pspec = param_partition_specs(cfg, rules, lead=(agent_axis,))
     vec = P(agent_axis)
+    rel = P(agent_axis, None) if learn_relevance else None
     return TrainState(
         params=pspec,
         opt_state={"m": pspec, "v": pspec, "count": vec},
-        know=Knowledge(tg=pspec, tsum=vec, rg=pspec, rsum=vec),
+        know=Knowledge(tg=pspec, tsum=vec, rg=pspec, rsum=vec,
+                       rel=rel),
         step=P(),
     )

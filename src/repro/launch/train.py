@@ -31,6 +31,20 @@ def main(argv=None):
     p.add_argument("--degree", type=int, default=4,
                    help="k for random_k; pod size for hierarchical")
     p.add_argument("--topology-seed", type=int, default=0)
+    p.add_argument("--resample-every", type=int, default=0,
+                   help="dynamic gossip: resample the random_k "
+                        "neighbor table every N steps inside the "
+                        "jitted loop (0 = static wiring; requires "
+                        "--topology random_k)")
+    p.add_argument("--relevance-mode", default="uniform",
+                   choices=["uniform", "grad_cos"],
+                   help="eq. 4 per-edge relevance R: 'uniform' "
+                        "(paper §6 static prior) or 'grad_cos' "
+                        "(learned online from the cosine similarity "
+                        "of the agents' share-window gradients)")
+    p.add_argument("--relevance-ema", type=float, default=0.9,
+                   help="EMA decay of the learned relevance estimate "
+                        "across share steps (grad_cos only)")
     p.add_argument("--full", action="store_true",
                    help="full (not reduced) config — TPU pods only")
     p.add_argument("--mesh", default="cpu",
@@ -57,6 +71,9 @@ def main(argv=None):
                      minibatch=args.minibatch, topology=args.topology,
                      degree=args.degree,
                      topology_seed=args.topology_seed,
+                     resample_every=args.resample_every,
+                     relevance_mode=args.relevance_mode,
+                     relevance_ema=args.relevance_ema,
                      knowledge_mode="streaming")
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
     opt = optim.adamw(args.lr)

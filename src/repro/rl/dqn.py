@@ -187,8 +187,13 @@ def make_dqn_group(env, opt: Optimizer, spec, key,
                    relevance: Optional[jnp.ndarray] = None,
                    delay: Optional[jnp.ndarray] = None):
     """Entry point for a DDADQN group: builds the DDAL loop (over
-    ``spec``'s communication topology, or an explicit ``Topology``)
-    and the initial GroupState. Returns (ddal, group_state)."""
+    ``spec``'s communication topology, or an explicit ``Topology`` /
+    ``DynamicTopology``) and the initial GroupState. Dynamic gossip
+    (``spec.resample_every``) and online learned relevance
+    (``spec.relevance_mode="grad_cos"``, ``spec.relevance_ema``) are
+    picked up from the spec; a static relevance prior (e.g.
+    ``repro.core.relevance.obs_overlap``) can be passed as a dense
+    ``relevance`` matrix. Returns (ddal, group_state)."""
     from repro.core import DDAL
     cfg = cfg or DQNConfig()
     gen, app, pof = make_dqn_callbacks(env, opt, cfg)

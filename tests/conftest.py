@@ -1,3 +1,5 @@
+import os
+
 import jax
 
 # CPU tests run in fp32 (reduced configs set this too); keep x64 off.
@@ -12,6 +14,18 @@ jax.config.update("jax_enable_x64", False)
 # ---------------------------------------------------------------------
 try:
     import hypothesis  # noqa: F401
+
+    # Bounded CI profile: per-test @settings(max_examples=...) caps are
+    # tuned for thoroughness; the CI fast lane trades examples for wall
+    # time so the whole lane stays inside its ~5 min budget. deadline
+    # is off in both profiles — first-call jit compilation blows any
+    # per-example deadline.
+    hypothesis.settings.register_profile(
+        "ci", max_examples=15, deadline=None, derandomize=True)
+    hypothesis.settings.register_profile(
+        "dev", max_examples=40, deadline=None)
+    hypothesis.settings.load_profile(
+        "ci" if os.environ.get("CI") else "dev")
 except ImportError:
     import functools
     import inspect
@@ -53,11 +67,18 @@ except ImportError:
             return fn
         return deco
 
+    # profile API used by this conftest's real-hypothesis branch;
+    # harmless no-ops under the shim
+    _settings.register_profile = lambda *a, **k: None
+    _settings.load_profile = lambda *a, **k: None
+
     def _given(*strats, **kwstrats):
         def deco(fn):
             @functools.wraps(fn)
             def runner():
-                n = getattr(fn, "_shim_max_examples", 25)
+                # mirror the real profiles: bounded on CI, fuller on dev
+                default_n = 15 if os.environ.get("CI") else 40
+                n = getattr(fn, "_shim_max_examples", default_n)
                 rng = random.Random(zlib.crc32(fn.__name__.encode()))
                 for _ in range(n):
                     args = [s.draw(rng) for s in strats]

@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
 from repro.common.pytree import tree_map, tree_weighted_sum
@@ -25,7 +25,6 @@ pos_floats = st.floats(min_value=1e-3, max_value=1e3,
 
 @given(st.lists(st.tuples(pos_floats, pos_floats), min_size=1,
                 max_size=16))
-@settings(max_examples=50, deadline=None)
 def test_eq4_weights_are_convex(tr):
     """w_j = ½(T̂_j + R̂_j) ≥ 0 and Σw = 1 (a convex combination)."""
     T = jnp.asarray([t for t, _ in tr])
@@ -36,7 +35,6 @@ def test_eq4_weights_are_convex(tr):
 
 
 @given(st.lists(pos_floats, min_size=2, max_size=12), pos_floats)
-@settings(max_examples=50, deadline=None)
 def test_eq4_scale_invariance(ts, scale):
     """Scaling all T (or all R) leaves the weights unchanged — only
     relative experience/relevance matters."""
@@ -49,7 +47,6 @@ def test_eq4_scale_invariance(ts, scale):
 
 
 @given(st.integers(2, 10))
-@settings(max_examples=20, deadline=None)
 def test_eq4_uniform_reduces_to_mean(m):
     """Uniform T and R ⇒ plain average (the DP limit)."""
     T = jnp.ones((m,))
@@ -76,7 +73,6 @@ def test_eq4_invalid_pieces_get_zero():
 
 
 @given(st.integers(1, 8), st.integers(3, 30))
-@settings(max_examples=20, deadline=None)
 def test_weighted_sum_matches_manual(m, n):
     key = jax.random.PRNGKey(m * 100 + n)
     G = jax.random.normal(key, (m, n))

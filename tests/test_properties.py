@@ -6,13 +6,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8),
        st.integers(1, 4), st.integers(1, 6))
-@settings(max_examples=25, deadline=None)
 def test_dispatch_indices_properties(seed, ne, k, cap):
     """For ANY routing: every valid slot holds a token routed to that
     expert; slots within an expert are in original token order; no
@@ -47,7 +46,6 @@ def test_dispatch_indices_properties(seed, ne, k, cap):
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
-@settings(max_examples=25, deadline=None)
 def test_rope_preserves_norm(seed, pos):
     """RoPE is a rotation — per-head vector norms are invariant."""
     from repro.models.rope import rope
@@ -61,7 +59,6 @@ def test_rope_preserves_norm(seed, pos):
 
 
 @given(st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=20, deadline=None)
 def test_cartpole_reward_equals_steps_alive(seed):
     """Total reward == number of live steps (gym semantics)."""
     from repro.rl import CartPole, episode_return, run_episode
@@ -78,7 +75,6 @@ def test_cartpole_reward_equals_steps_alive(seed):
 
 
 @given(st.integers(1, 300), st.integers(8, 64))
-@settings(max_examples=30, deadline=None)
 def test_sliding_window_slot_mapping(pos, window):
     """Ring-buffer slot mapping: injective over any `window`-length
     position range."""
