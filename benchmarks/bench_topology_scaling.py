@@ -22,8 +22,17 @@ sweeping static vs dynamic gossip × uniform vs learned (grad-cosine)
 relevance, reporting per-env mean return and the learned
 within-env / cross-env relevance split.
 
+``--pods`` runs the multi-host dispatch sweep instead (ISSUE 3): the
+hierarchical streaming combine decomposed onto a two-level
+(pod, agent) placement (``repro.core.pod_dispatch``), reporting the
+analytic cross-pod bytes per share step of the dispatched path
+(O(pods · k_leader · |params|)) against the flat single-mesh combine
+(O(n · k · |params|)), plus the per-combine wall time of both
+decompositions. Acceptance: at fixed pod count the dispatched
+cross-pod bytes must not grow with agent count.
+
     PYTHONPATH=src python benchmarks/bench_topology_scaling.py \
-        [--smoke] [--hetero]
+        [--smoke] [--hetero] [--pods]
 """
 from __future__ import annotations
 
@@ -189,6 +198,97 @@ def bench_one(n: int, topology: str, degree: int, n_params: int,
 
 
 # ---------------------------------------------------------------------
+# multi-host pod dispatch sweep (ISSUE 3)
+# ---------------------------------------------------------------------
+def bench_pod_row(pods: int, pod_size: int, n_params: int) -> dict:
+    """One cell of the pod sweep: hierarchical(n = pods · pod_size)
+    combined flat vs pod-dispatched (reference decomposition — same
+    math the shard_map path runs, timeable on one device), with the
+    analytic cross-pod traffic of both placements."""
+    from repro.core import topology as T
+    from repro.core.pod_dispatch import (
+        cross_pod_bytes,
+        flat_exchange_bytes,
+        make_pod_dispatch,
+        split_topology,
+    )
+    from repro.core.sharded_ddal import Knowledge, _combine_topo
+
+    n = pods * pod_size
+    topo = T.hierarchical(n, pod_size)
+    lay = T.hierarchical_layout(n, pod_size)
+    edges = split_topology(topo, lay)
+    rng = np.random.default_rng(0)
+    know = Knowledge(
+        tg={"w": jnp.asarray(rng.normal(size=(n, n_params)),
+                             jnp.float32)},
+        tsum=jnp.asarray(rng.uniform(1, 3, n), jnp.float32),
+        rg={"w": jnp.asarray(rng.normal(size=(n, n_params)),
+                             jnp.float32)},
+        rsum=jnp.asarray(rng.uniform(1, 3, n), jnp.float32),
+    )
+    flat = jax.jit(lambda k: _combine_topo(k, topo))
+    pod = jax.jit(make_pod_dispatch(topo, lay))
+    flat_ms = _time_min(lambda: flat(know), epochs=1)
+    pod_ms = _time_min(lambda: pod(know), epochs=1)
+    return {
+        "pods": pods, "n": n, "pod_size": pod_size,
+        "l_edges": int(edges.ledge.sum()),
+        "cross_mb": cross_pod_bytes(edges, n_params) / 2**20,
+        "flat_mb": flat_exchange_bytes(topo, n_params) / 2**20,
+        "flat_ms": flat_ms, "pod_ms": pod_ms,
+    }
+
+
+def pod_sweep(args) -> list:
+    """Pod-count sweep at fixed n, then agent-count sweep at fixed
+    pods — the second is the scaling acceptance: dispatched cross-pod
+    bytes must be flat in n (they are O(pods · k_leader · |params|))."""
+    n = 16 if args.smoke else 64
+    pod_counts = [p for p in (1, 2, 4, 8) if p <= n // 2]
+    rows = []
+    print(f"pod dispatch sweep (n={n}, {args.params} params/agent):")
+    print(f"{'pods':>5} {'n':>4} {'pod_sz':>6} {'l_edges':>7} "
+          f"{'cross MB':>9} {'flat MB':>8} {'flat ms':>8} "
+          f"{'pod ms':>7}")
+
+    def show(r):
+        rows.append(r)
+        print(f"{r['pods']:5d} {r['n']:4d} {r['pod_size']:6d} "
+              f"{r['l_edges']:7d} {r['cross_mb']:9.2f} "
+              f"{r['flat_mb']:8.2f} {r['flat_ms']:8.2f} "
+              f"{r['pod_ms']:7.2f}")
+
+    for pods in pod_counts:
+        show(bench_pod_row(pods, n // pods, args.params))
+
+    fixed_pods = 4 if n >= 16 else 2
+    print(f"\nfixed pods={fixed_pods}, growing agents:")
+    sizes = (2, 4) if args.smoke else (4, 8, 16)
+    agent_rows = [bench_pod_row(fixed_pods, s, args.params)
+                  for s in sizes]
+    for r in agent_rows:
+        show(r)
+    ok_n = len({r["cross_mb"] for r in agent_rows}) == 1
+    print(f"\nacceptance: cross-pod bytes at pods={fixed_pods} flat "
+          f"in n ({[round(r['cross_mb'], 3) for r in agent_rows]} MB "
+          f"for n={[r['n'] for r in agent_rows]}) → "
+          f"{'PASS' if ok_n else 'FAIL'}")
+    by_pods = {r["pods"]: r for r in rows[:len(pod_counts)]}
+    ok_p = all(
+        abs(by_pods[p]["cross_mb"]
+            - p * (p - 1) / (q * (q - 1)) * by_pods[q]["cross_mb"])
+        < 1e-9
+        for p in pod_counts for q in pod_counts if p > q > 1)
+    print(f"acceptance: cross-pod bytes ∝ pods · k_leader "
+          f"(= pods · (pods − 1) directed leader edges) → "
+          f"{'PASS' if ok_p else 'FAIL'}")
+    if not (ok_n and ok_p):
+        raise SystemExit("pod dispatch traffic scaling FAILED")
+    return rows
+
+
+# ---------------------------------------------------------------------
 # heterogeneous CartPole/GridWorld adaptive-wiring ablation
 # ---------------------------------------------------------------------
 _OBS_DIM, _N_ACT, _MAX_STEPS = 25, 4, 100
@@ -298,6 +398,10 @@ def main(argv=None):
                    help="run the heterogeneous CartPole/GridWorld "
                         "static-vs-dynamic × uniform-vs-learned "
                         "relevance ablation")
+    p.add_argument("--pods", action="store_true",
+                   help="run the multi-host pod dispatch sweep "
+                        "instead: cross-pod bytes + combine time, "
+                        "flat vs two-level placement")
     p.add_argument("--hetero-epochs", type=int, default=None,
                    help="epochs per hetero ablation cell")
     p.add_argument("--resample-every", type=int, default=5,
@@ -311,6 +415,9 @@ def main(argv=None):
                    help="eq. 4 update cadence (paper uses 100)")
     p.add_argument("--max-delay", type=int, default=2)
     args = p.parse_args(argv)
+
+    if args.pods:
+        return pod_sweep(args)
 
     sizes = [4, 16] if args.smoke else [4, 16, 64, 256]
     epochs = args.epochs or (5 if args.smoke else 20)

@@ -209,6 +209,13 @@ class GroupSpec:
     # | star | random_k | hierarchical
     topology: str = "full"
     degree: int = 4              # k for random_k; pod size for hierarchical
+    pods: int = 0                # multi-host dispatch: map hierarchical
+                                 # pods onto a two-level mesh (0 = flat
+                                 # single-mesh combine; requires
+                                 # n_agents == pods * degree)
+    pod_axis: str = "pod"        # mesh axis the leader-level (DCN)
+                                 # exchange crosses; intra-pod exchange
+                                 # stays on the "agent" axis
     topology_seed: int = 0       # seed for random_k gossip sampling
     resample_every: int = 0      # dynamic gossip: resample the random_k
                                  # table every N epochs (0 = static)
@@ -250,3 +257,24 @@ class GroupSpec:
             raise ValueError(
                 f"relevance_ema must be in [0, 1), got "
                 f"{self.relevance_ema}")
+        if self.pods < 0:
+            raise ValueError(f"pods must be >= 0, got {self.pods}")
+        if self.pods > 0:
+            if self.topology != "hierarchical":
+                raise ValueError(
+                    f"pods > 0 maps hierarchical pods onto a two-level "
+                    f"mesh and needs topology='hierarchical', got "
+                    f"{self.topology!r}")
+            if self.n_agents != self.pods * self.degree:
+                raise ValueError(
+                    f"pod dispatch needs n_agents == pods * degree "
+                    f"(uniform pods of `degree` agents), got "
+                    f"n_agents={self.n_agents}, pods={self.pods}, "
+                    f"degree={self.degree}")
+            if (not self.pod_axis
+                    or not isinstance(self.pod_axis, str)
+                    or self.pod_axis == "agent"):
+                raise ValueError(
+                    f"pod_axis must be a non-empty mesh axis name "
+                    f"distinct from the intra-pod 'agent' axis, got "
+                    f"{self.pod_axis!r}")

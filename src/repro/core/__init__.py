@@ -12,6 +12,13 @@ from repro.core.knowledge import (  # noqa: F401
     make_store,
     weighted_average,
 )
+from repro.core.pod_dispatch import (  # noqa: F401
+    PodEdges,
+    cross_pod_bytes,
+    flat_exchange_bytes,
+    make_pod_dispatch,
+    split_topology,
+)
 from repro.core.sharded_ddal import (  # noqa: F401
     Knowledge,
     TrainState,
@@ -27,10 +34,14 @@ from repro.core.relevance import (  # noqa: F401
 from repro.core.topology import (  # noqa: F401
     TOPOLOGIES,
     DynamicTopology,
+    PodLayout,
     Topology,
+    cross_pod_mask,
     delay_from_hops,
+    edge_pod_ids,
     full,
     hierarchical,
+    hierarchical_layout,
     hop_distances,
     make_topology,
     random_k,

@@ -29,6 +29,15 @@ O(|E|) cross-pod traffic instead of O(A²) — and both eq. 4
 normalisations (T and R) become neighbor-local. The ``full`` + uniform
 case keeps the cheaper global-sum fast path.
 
+Multi-host pod dispatch (ISSUE 3): with ``spec.pods > 0`` the
+hierarchical combine splits into an intra-pod segment (local to the
+fast ``"agent"`` mesh axis) and a leader-level segment in which only
+each pod's leader planes cross ``spec.pod_axis`` —
+``repro.core.pod_dispatch``; cross-pod traffic drops from
+O(n·k·|params|) to O(pods·k_leader·|params|) per share step. The
+1-pod case is bitwise the flat ``_combine_topo`` (both run the same
+``_edge_sums`` / ``_finish_combine``).
+
 Adaptive wiring (ISSUE 2): a ``DynamicTopology``
 (``spec.resample_every > 0``) resamples the gossip edge list inside
 the jitted step — the segment-sum consumes the traced table directly
@@ -142,56 +151,86 @@ def _combine(know: Knowledge, R: jnp.ndarray, uniform: bool):
     return tree_map(avg, know.tg, know.rg)
 
 
-def _combine_topo(know: Knowledge, topo: Topology):
-    """eq. 4 with neighbor-local normalisation: for each destination,
-    both the T and R terms sum over its in-neighbors only. The scalar
-    denominators reduce with a segment-sum over the static edge list;
-    the gradient leaves reduce with a neighbor-masked adjacency
-    matmul — mathematically the same segment-sum, but it never
-    materialises (E, *param) gathered copies of the accumulators
-    (a k-fold peak-memory blowup at LLM scale). GSPMD lowers the
-    contraction over the pod-sharded agent axis to collectives that
-    move only the masked edges' worth of data."""
-    A, k = topo.nbr.shape
-    eps = 1e-12
-    src = jnp.reshape(topo.nbr, (-1,))               # (E,) sources
+def _edge_sums(know: Knowledge, nbr, mask, rel):
+    """eq. 4 numerators/denominators over one edge list: for each
+    destination, sum the sources' accumulators over its edge slots.
+    The scalar sums reduce with a segment-sum over the edge list; the
+    gradient leaves reduce with a masked adjacency matmul —
+    mathematically the same segment-sum, but it never materialises
+    (E, *param) gathered copies of the accumulators (a k-fold
+    peak-memory blowup at LLM scale). Shared by the flat single-mesh
+    combine and both segments (intra-pod, leader-level) of the pod
+    dispatch, so the 1-pod dispatched path is the *same computation*
+    as the flat path, not a reimplementation."""
+    A, k = nbr.shape
+    src = jnp.reshape(nbr, (-1,))                    # (E,) sources
     seg = jnp.repeat(jnp.arange(A), k)               # (E,) destinations
-    m = jnp.reshape(topo.mask, (-1,)).astype(jnp.float32)
-    rel = jnp.reshape(topo.relevance, (-1,)) * m
+    m = jnp.reshape(mask, (-1,)).astype(jnp.float32)
+    relf = jnp.reshape(jnp.where(mask, rel, 0.0), (-1,))
 
     def seg_sum(x):
         return jax.ops.segment_sum(x, seg, num_segments=A)
 
-    tden = jnp.maximum(seg_sum(m * know.tsum[src]), eps)     # (A,)
-    rden = jnp.maximum(seg_sum(rel * know.rsum[src]), eps)
+    tden = seg_sum(m * know.tsum[src])               # (A,)
+    rden = seg_sum(relf * know.rsum[src])
 
     # dense (A, A) src→dst weights, zero off-graph (A = pods, small)
-    Rd = topo.dense_relevance()
+    Rd = jnp.zeros((A, A)).at[src, seg].add(relf)
     M = jnp.zeros((A, A)).at[src, seg].add(m)
+    tnum = tree_map(lambda g: jnp.tensordot(M, g, axes=(0, 0)), know.tg)
+    rnum = tree_map(lambda g: jnp.tensordot(Rd, g, axes=(0, 0)), know.rg)
+    return tnum, tden, rnum, rden
 
-    def avg(tg_leaf, rg_leaf):
-        ex = (-1,) + (1,) * (tg_leaf.ndim - 1)
-        t = jnp.tensordot(M, tg_leaf, axes=(0, 0))   # (A_dst, *param)
-        r = jnp.tensordot(Rd, rg_leaf, axes=(0, 0))
-        t = t / jnp.reshape(tden, ex)
-        r = r / jnp.reshape(rden, ex)
-        return 0.5 * (t + r)
 
-    return tree_map(avg, know.tg, know.rg)
+def _finish_combine(tnum, tden, rnum, rden):
+    """ḡ = ½(t/T̂ + r/R̂) with the eps clamp applied once, after every
+    segment's contribution has been accumulated into the sums."""
+    eps = 1e-12
+    tden = jnp.maximum(tden, eps)
+    rden = jnp.maximum(rden, eps)
+
+    def avg(t, r):
+        ex = (-1,) + (1,) * (t.ndim - 1)
+        return 0.5 * (t / jnp.reshape(tden, ex)
+                      + r / jnp.reshape(rden, ex))
+
+    return tree_map(avg, tnum, rnum)
+
+
+def _combine_topo(know: Knowledge, topo: Topology):
+    """eq. 4 with neighbor-local normalisation: for each destination,
+    both the T and R terms sum over its in-neighbors only. GSPMD
+    lowers the contraction over the sharded agent axis to collectives
+    that move only the masked edges' worth of data."""
+    return _finish_combine(
+        *_edge_sums(know, topo.nbr, topo.mask, topo.relevance))
 
 
 def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                           opt: Optimizer,
                           relevance: Optional[jnp.ndarray] = None,
                           loss_fn: Optional[Callable] = None,
-                          topology: Optional[Topology] = None):
+                          topology: Optional[Topology] = None,
+                          mesh=None):
     """Build the jittable DDAL train step.
 
     Returns step(state, batch) -> (state', metrics); ``batch`` leaves
     carry a leading (n_agents,) axis (each agent's own data stream).
+    The model is resolved lazily from ``cfg`` only when no ``loss_fn``
+    is supplied, so toy losses need no ArchConfig (pass ``cfg=None``).
+
+    With ``spec.pods > 0`` (hierarchical topology only) the share-step
+    combine runs pod-dispatched (``repro.core.pod_dispatch``): the
+    intra-pod segment stays local to the fast ``"agent"`` mesh axis
+    and only the pod leaders' planes cross the ``spec.pod_axis`` axis.
+    Pass the two-level ``mesh`` (``repro.launch.mesh.make_pod_mesh``)
+    to run the real collective path; without a mesh the mathematically
+    identical single-device decomposition runs instead, so the flag is
+    meaningful on a 1-CPU rig too.
     """
-    model = get_model(cfg)
     if loss_fn is None:
+        model = get_model(cfg)
+
         def loss_fn(params, batch):        # noqa: F811
             return model.loss(cfg, params, batch)
     A = spec.n_agents
@@ -211,12 +250,34 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
     R = (relevance if relevance is not None
          else relevance_matrix(A, "uniform"))
 
+    pod_combine = None
+    if spec.pods > 0:
+        from repro.core.pod_dispatch import make_pod_dispatch
+        from repro.core.topology import hierarchical_layout
+        if not isinstance(topology, Topology):
+            raise ValueError(
+                "spec.pods > 0 needs a static hierarchical Topology "
+                f"(got {type(topology).__name__})")
+        layout = hierarchical_layout(A, spec.degree)
+        pod_combine = make_pod_dispatch(
+            topology, layout, mesh=mesh, pod_axis=spec.pod_axis)
+
     def topo_at(step) -> Topology:
         if isinstance(topology, DynamicTopology):
             return topology.at_epoch(step)
         return topology
 
-    if topology is not None:
+    if pod_combine is not None:
+        def combine(k2, rel, step):
+            del step
+            if learn_rel:
+                eff = combine_relevance(
+                    topology.relevance,
+                    REL.gather_edges(rel, topology.nbr))
+                return pod_combine(
+                    k2, jnp.where(topology.mask, eff, 0.0))
+            return pod_combine(k2)
+    elif topology is not None:
         def combine(k2, rel, step):
             topo = topo_at(step)
             if learn_rel:

@@ -142,12 +142,24 @@ class Topology(NamedTuple):
 # constructors
 # ---------------------------------------------------------------------
 def _from_neighbor_lists(nbrs: Sequence[Sequence[int]]) -> Topology:
-    """Build a padded (n, k) table from per-dst in-neighbor lists."""
+    """Build a padded (n, k) table from per-dst in-neighbor lists.
+
+    A source repeated in one destination's list would double-count its
+    plane in every eq. 4 sum (the segment-sum adds one term per edge
+    slot), so duplicates are a construction error, not a graph choice.
+    The constructors all build from sets, but the hierarchical leader
+    wiring composes two overlapping sets (pod members ∪ leaders) —
+    this guard keeps that overlap from ever reaching the edge table.
+    """
     n = len(nbrs)
     k = max(1, max(len(v) for v in nbrs))
     nbr = np.zeros((n, k), np.int32)
     mask = np.zeros((n, k), bool)
     for i, v in enumerate(nbrs):
+        if len(set(v)) != len(v):
+            raise ValueError(
+                f"duplicate in-neighbor for destination {i}: {v} — "
+                f"a repeated source double-counts its plane in eq. 4")
         nbr[i, :len(v)] = v
         mask[i, :len(v)] = True
     return Topology(
@@ -223,7 +235,14 @@ def hierarchical(n: int, pod_size: int = 4) -> Topology:
     agents; the first agent of each pod is a *leader* additionally
     connected all-to-all with the other leaders. Knowledge crosses pods
     in two hops (member → leader → member), mirroring ICI-dense /
-    DCN-sparse pod fabrics."""
+    DCN-sparse pod fabrics.
+
+    A leader belongs to both sets it is wired from (its pod's members
+    and the leader clique), so its own id must enter its neighbor list
+    exactly once — the set union here plus the duplicate guard in
+    ``_from_neighbor_lists`` pin that; ``repro.core.pod_dispatch``
+    additionally masks the leader self-edge out of the cross-pod edge
+    list (the leader's own plane enters through the intra-pod sum)."""
     pod_size = max(1, min(pod_size, n))
     leaders = list(range(0, n, pod_size))
     nbrs = []
@@ -236,6 +255,67 @@ def hierarchical(n: int, pod_size: int = 4) -> Topology:
             s |= set(leaders)
         nbrs.append(sorted(s))
     return _from_neighbor_lists(nbrs)
+
+
+# ---------------------------------------------------------------------
+# pod placement metadata (multi-host dispatch, ISSUE 3)
+# ---------------------------------------------------------------------
+class PodLayout(NamedTuple):
+    """Static agent→pod placement for the ``hierarchical`` topology.
+
+    pod_id:      (n,) int32 — pod of each agent.
+    leader_mask: (n,) bool  — True for the one leader per pod.
+    leaders:     (pods,) int32 — the leader agent of each pod.
+    pod_size:    agents per pod (uniform — validated).
+
+    All arrays are host numpy (the layout is placement, not data): it
+    parameterises which mesh axis each edge's exchange crosses, so it
+    must be static at trace time.
+    """
+    pod_id: np.ndarray
+    leader_mask: np.ndarray
+    leaders: np.ndarray
+    pod_size: int
+
+    @property
+    def n_agents(self) -> int:
+        return int(self.pod_id.shape[0])
+
+    @property
+    def n_pods(self) -> int:
+        return int(self.leaders.shape[0])
+
+
+def hierarchical_layout(n: int, pod_size: int) -> PodLayout:
+    """The placement emitted alongside ``hierarchical(n, pod_size)``:
+    contiguous pods of ``pod_size`` agents, first agent of each pod is
+    its leader. Dispatch onto a two-level mesh needs uniform pods, so
+    ``pod_size`` must divide ``n``."""
+    if pod_size < 1 or n % pod_size:
+        raise ValueError(
+            f"hierarchical_layout needs pod_size >= 1 dividing "
+            f"n_agents, got n={n}, pod_size={pod_size}")
+    pod_id = (np.arange(n, dtype=np.int32) // pod_size).astype(np.int32)
+    leaders = np.arange(0, n, pod_size, dtype=np.int32)
+    leader_mask = np.zeros((n,), bool)
+    leader_mask[leaders] = True
+    return PodLayout(pod_id=pod_id, leader_mask=leader_mask,
+                     leaders=leaders, pod_size=pod_size)
+
+
+def edge_pod_ids(topo: Topology, layout: PodLayout) -> np.ndarray:
+    """(n, k) int32 — the pod of each edge slot's *source* agent
+    (arbitrary where masked out, like ``nbr`` itself)."""
+    return np.asarray(layout.pod_id)[np.asarray(topo.nbr)]
+
+
+def cross_pod_mask(topo: Topology, layout: PodLayout) -> np.ndarray:
+    """(n, k) bool — which real edges cross a pod boundary (these are
+    the only edges whose exchange must ride the slow ``pod`` mesh
+    axis; everything else stays on the fast intra-pod axis)."""
+    src_pod = edge_pod_ids(topo, layout)
+    dst_pod = np.asarray(layout.pod_id)[:, None]
+    return np.asarray(topo.mask) & (src_pod != dst_pod)
 
 
 # ---------------------------------------------------------------------

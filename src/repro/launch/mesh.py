@@ -22,11 +22,41 @@ def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
-def train_rules(mesh) -> dict:
-    """Logical→physical sharding rules for training on ``mesh``."""
-    has_pod = "pod" in mesh.axis_names
+def make_pod_mesh(n_pods: int, devices_per_pod: int = None,
+                  pod_axis: str = "pod"):
+    """Two-level ``(pod_axis, "agent")`` mesh for hierarchical DDAL
+    dispatch: the ``"agent"`` axis is the fast intra-pod interconnect
+    (ICI on a TPU pod), ``pod_axis`` the slow cross-pod one (DCN).
+    Only pod leaders' knowledge planes ever cross ``pod_axis``
+    (``repro.core.pod_dispatch``).
+
+    On a single-host simulation rig the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the same
+    mesh the multi-device test lane uses."""
+    n_dev = jax.device_count()
+    if devices_per_pod is None:
+        if n_pods < 1 or n_dev % n_pods:
+            raise ValueError(
+                f"{n_dev} devices do not split into {n_pods} pods — "
+                f"pass devices_per_pod explicitly")
+        devices_per_pod = n_dev // n_pods
+    return jax.make_mesh((n_pods, devices_per_pod),
+                         (pod_axis, "agent"))
+
+
+def train_rules(mesh, pod_axis: str = "pod") -> dict:
+    """Logical→physical sharding rules for training on ``mesh``.
+    ``pod_axis`` must name the cross-pod axis when the mesh was built
+    with a non-default name (``make_pod_mesh(..., pod_axis=...)``)."""
+    has_pod = pod_axis in mesh.axis_names
+    # two-level DDAL mesh: the agent axis spreads over pods × the
+    # intra-pod agent axis (repro.core.pod_dispatch)
+    if has_pod and "agent" in mesh.axis_names:
+        agent = (pod_axis, "agent")
+    else:
+        agent = pod_axis if has_pod else None
     return {
-        "agent": "pod" if has_pod else None,
+        "agent": agent,
         "batch": "data",
         "vocab": "model",
         "heads": "model",

@@ -19,6 +19,37 @@ from repro.models import cache_specs, param_logical_axes, param_specs
 Axis = Union[None, str, Tuple[str, ...]]
 
 
+def ddal_agent_axis(mesh, pod_axis: str = "pod") -> Axis:
+    """The physical mesh axes the DDAL agent dim shards over: both
+    levels of a two-level pod mesh (``repro.launch.mesh.make_pod_mesh``
+    — agents laid out pod-major so pods align with ``pod_axis``, the
+    contract ``repro.core.pod_dispatch`` validates), the ``pod_axis``
+    alone on the single-level production mesh, or unsharded."""
+    names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
+    if pod_axis in names and "agent" in names:
+        return (pod_axis, "agent")
+    if pod_axis in names:
+        return pod_axis
+    return None
+
+
+def agent_sharded_state(state, mesh, pod_axis: str = "pod"):
+    """Place a DDAL TrainState (or any pytree of leading-agent-axis
+    leaves + scalars) onto ``mesh``: dim 0 of every non-scalar leaf
+    shards over ``ddal_agent_axis``, so pods land on their mesh rows
+    before the first step instead of being resharded inside jit."""
+    axis = ddal_agent_axis(mesh, pod_axis)
+    if axis is None:
+        return state
+
+    def put(x):
+        spec = P(axis) if getattr(x, "ndim", 0) else P()
+        return jax.device_put(
+            x, jax.sharding.NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, state)
+
+
 def _is_axes_tuple(x) -> bool:
     return isinstance(x, tuple) and all(
         n is None or isinstance(n, str) for n in x)

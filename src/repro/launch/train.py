@@ -31,6 +31,16 @@ def main(argv=None):
     p.add_argument("--degree", type=int, default=4,
                    help="k for random_k; pod size for hierarchical")
     p.add_argument("--topology-seed", type=int, default=0)
+    p.add_argument("--pods", type=int, default=0,
+                   help="multi-host dispatch: map hierarchical pods "
+                        "onto a two-level (pod, agent) mesh — "
+                        "intra-pod exchange stays on the fast agent "
+                        "axis, only pod leaders' planes cross the pod "
+                        "axis (requires --topology hierarchical and "
+                        "agents == pods * degree; 0 = flat combine)")
+    p.add_argument("--pod-axis", default="pod",
+                   help="mesh axis name the leader-level exchange "
+                        "crosses (--pods only)")
     p.add_argument("--resample-every", type=int, default=0,
                    help="dynamic gossip: resample the random_k "
                         "neighbor table every N steps inside the "
@@ -48,7 +58,13 @@ def main(argv=None):
     p.add_argument("--full", action="store_true",
                    help="full (not reduced) config — TPU pods only")
     p.add_argument("--mesh", default="cpu",
-                   choices=["cpu", "prod", "prod-multipod"])
+                   choices=["cpu", "prod", "prod-multipod", "pods"],
+                   help="'pods' builds the two-level (pod, agent) "
+                        "mesh over the visible devices (simulate with "
+                        "XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=N) and runs the pod-dispatched "
+                        "combine collectives; 'cpu' with --pods runs "
+                        "the same decomposition without collectives")
     p.add_argument("--ckpt", default=None)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -62,14 +78,15 @@ def main(argv=None):
     from repro.configs.base import GroupSpec, ShapeConfig
     from repro.core import init_train_state, make_group_train_step
     from repro.data import StreamSpec, make_group_batch
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_pod_mesh, make_production_mesh
 
     cfg = get_arch_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
     spec = GroupSpec(n_agents=args.agents, threshold=args.threshold,
                      minibatch=args.minibatch, topology=args.topology,
-                     degree=args.degree,
+                     degree=args.degree, pods=args.pods,
+                     pod_axis=args.pod_axis,
                      topology_seed=args.topology_seed,
                      resample_every=args.resample_every,
                      relevance_mode=args.relevance_mode,
@@ -79,7 +96,13 @@ def main(argv=None):
     opt = optim.adamw(args.lr)
     stream = StreamSpec(seed=args.seed)
 
-    if args.mesh != "cpu":
+    mesh = None
+    if args.mesh == "pods":
+        if args.pods < 1:
+            raise SystemExit("--mesh pods needs --pods >= 1")
+        mesh = make_pod_mesh(args.pods, pod_axis=args.pod_axis)
+        ctx = set_mesh(mesh)
+    elif args.mesh != "cpu":
         mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
         ctx = set_mesh(mesh)
     else:
@@ -89,7 +112,11 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     with ctx:
         state = init_train_state(cfg, spec, opt, key)
-        step_fn = jax.jit(make_group_train_step(cfg, spec, opt))
+        if mesh is not None:
+            from repro.launch.shardings import agent_sharded_state
+            state = agent_sharded_state(state, mesh, args.pod_axis)
+        step_fn = jax.jit(make_group_train_step(cfg, spec, opt,
+                                                mesh=mesh))
         n_params = sum(int(x.size) for x in
                        jax.tree.leaves(state.params)) // args.agents
         print(f"arch={args.arch} reduced={not args.full} "

@@ -1,0 +1,395 @@
+"""Multi-host pod dispatch (ISSUE 3): the hierarchical topology's
+two-level decomposition — intra-pod segment-sum + sparse leader-level
+exchange — against the flat single-mesh ``_combine_topo`` oracle.
+
+Single-device tests pin the layout metadata, the edge split, the
+analytic cross-pod traffic accounting, the leader self-edge
+regression, and the *reference* decomposition (bitwise for one pod,
+numerically for many). Tests marked ``multi_device`` run the real
+``shard_map`` collectives (``all_gather`` on the agent axis,
+``psum``/``ppermute`` on the pod axis) on 8 simulated devices — the
+``multi_device`` fixture re-execs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` when the
+session is single-device."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.configs.base import GroupSpec
+from repro.core import topology as T
+from repro.core.pod_dispatch import (
+    cross_pod_bytes,
+    flat_exchange_bytes,
+    make_pod_dispatch,
+    split_topology,
+)
+from repro.core.sharded_ddal import Knowledge, _combine_topo
+
+
+def _rand_knowledge(rng, A, p):
+    return Knowledge(
+        tg={"w": jnp.asarray(rng.normal(size=(A, p)), jnp.float32)},
+        tsum=jnp.asarray(rng.uniform(1, 3, A), jnp.float32),
+        rg={"w": jnp.asarray(rng.normal(size=(A, p)), jnp.float32)},
+        rsum=jnp.asarray(rng.uniform(1, 3, A), jnp.float32),
+    )
+
+
+def _hier(n, pod_size, rel_seed=None):
+    topo = T.hierarchical(n, pod_size)
+    if rel_seed is not None:
+        R = np.random.default_rng(rel_seed).uniform(0.2, 1.0, (n, n))
+        topo = topo.with_relevance(jnp.asarray(R, jnp.float32))
+    return topo, T.hierarchical_layout(n, pod_size)
+
+
+# ----------------------------------------------------------------------
+# layout + edge metadata
+# ----------------------------------------------------------------------
+def test_pod_layout_metadata():
+    lay = T.hierarchical_layout(12, 4)
+    assert lay.n_agents == 12 and lay.n_pods == 3
+    np.testing.assert_array_equal(lay.pod_id, np.arange(12) // 4)
+    np.testing.assert_array_equal(lay.leaders, [0, 4, 8])
+    assert lay.leader_mask.sum() == 3
+    assert all(lay.leader_mask[lay.leaders])
+    with pytest.raises(ValueError, match="pod_size"):
+        T.hierarchical_layout(10, 4)
+
+
+def test_edge_pod_ids_and_cross_mask():
+    topo, lay = _hier(8, 4)
+    src_pod = T.edge_pod_ids(topo, lay)
+    cross = T.cross_pod_mask(topo, lay)
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    for i in range(8):
+        for j in range(topo.degree):
+            if not mask[i, j]:
+                assert not cross[i, j]
+                continue
+            assert src_pod[i, j] == nbr[i, j] // 4
+            assert cross[i, j] == (nbr[i, j] // 4 != i // 4)
+    # the only cross-pod edges are the two leader edges 0↔4
+    assert {(int(nbr[i, j]), i) for i, j in np.argwhere(cross)} == \
+        {(0, 4), (4, 0)}
+
+
+def test_split_topology_leader_edges_and_validation():
+    topo, lay = _hier(12, 4)
+    edges = split_topology(topo, lay)
+    # intra ∪ leader == all edges, disjoint
+    mask = np.asarray(topo.mask)
+    np.testing.assert_array_equal(edges.intra_mask | edges.leader_mask,
+                                  mask)
+    assert not (edges.intra_mask & edges.leader_mask).any()
+    # leader clique complete, self-edge masked off the diagonal
+    assert edges.ledge.sum() == 3 * 2
+    assert not edges.ledge.diagonal().any()
+    # slots point back at the right sources
+    nbr = np.asarray(topo.nbr)
+    for sp in range(3):
+        for dp in range(3):
+            if sp == dp:
+                continue
+            slot = int(edges.lslot[sp, dp])
+            assert nbr[lay.leaders[dp], slot] == lay.leaders[sp]
+    # a graph with member-level cross-pod edges has no pod placement
+    ring = T.ring(8)
+    with pytest.raises(ValueError, match="leader"):
+        split_topology(ring, T.hierarchical_layout(8, 4))
+
+
+# ----------------------------------------------------------------------
+# leader self-edge regression (ISSUE 3 satellite): a leader belongs to
+# both sets it is wired from (pod members ∪ leader clique) — its own
+# id must enter its row exactly once, for odd and even pod sizes, or
+# its plane is double-counted in every eq. 4 sum.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n,pod_size", [(9, 3), (15, 5), (8, 4),
+                                        (12, 3)])
+def test_hierarchical_leader_self_edge_counted_once(n, pod_size):
+    topo = T.hierarchical(n, pod_size)
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    for i in range(n):
+        srcs = nbr[i][mask[i]].tolist()
+        assert len(set(srcs)) == len(srcs), \
+            f"duplicate source in dst {i}'s neighbor list: {srcs}"
+        assert srcs.count(i) == 1
+    # the eq. 4 adjacency the combine actually contracts with: every
+    # (src, dst) weight is 0 or 1 — a duplicated self-edge would put a
+    # 2 on a leader's diagonal
+    A, k = nbr.shape
+    src = nbr.reshape(-1)
+    seg = np.repeat(np.arange(A), k)
+    M = np.zeros((A, A))
+    np.add.at(M, (src, seg), mask.reshape(-1).astype(float))
+    assert M.max() == 1.0
+    np.testing.assert_array_equal(np.diag(M), np.ones(A))
+
+
+def test_duplicate_neighbor_list_is_rejected():
+    with pytest.raises(ValueError, match="double-counts"):
+        T._from_neighbor_lists([[0, 1, 1], [0, 1]])
+
+
+# ----------------------------------------------------------------------
+# leader reachability property (hypothesis — mirrored by the
+# no-hypothesis conftest shim): every agent's knowledge reaches a
+# leader in <= 1 intra-pod hop, i.e. each agent is an in-neighbor of
+# its pod's leader.
+# ----------------------------------------------------------------------
+@given(st.integers(1, 6), st.integers(1, 6))
+def test_every_agent_reaches_a_leader_in_one_intra_pod_hop(pods,
+                                                           pod_size):
+    n = pods * pod_size
+    topo = T.hierarchical(n, pod_size)
+    lay = T.hierarchical_layout(n, pod_size)
+    nbr = np.asarray(topo.nbr)
+    mask = np.asarray(topo.mask)
+    for i in range(n):
+        leader = int(lay.leaders[lay.pod_id[i]])
+        in_nbrs = set(nbr[leader][mask[leader]].tolist())
+        assert i in in_nbrs, \
+            f"agent {i} cannot reach its leader {leader} in one hop"
+        assert lay.pod_id[i] == lay.pod_id[leader]
+
+
+# ----------------------------------------------------------------------
+# cross-pod traffic accounting: O(pods · k_leader · |params|), not
+# O(n · k · |params|)
+# ----------------------------------------------------------------------
+def test_cross_pod_bytes_scale_with_pods_not_agents():
+    P = 10_000
+    # fixed pods, growing pod size: dispatched traffic is constant,
+    # flat traffic grows with n · k
+    base = cross_pod_bytes(split_topology(*_hier(4 * 4, 4)), P)
+    for pod_size in (8, 16):
+        topo, lay = _hier(4 * pod_size, pod_size)
+        assert cross_pod_bytes(split_topology(topo, lay), P) == base
+    assert (flat_exchange_bytes(_hier(4 * 16, 16)[0], P)
+            > 3 * flat_exchange_bytes(_hier(4 * 4, 4)[0], P))
+    # growing pods at fixed pod size: dispatched traffic is linear in
+    # the directed leader edge count pods · (pods − 1)
+    got = []
+    for pods in (2, 4, 8):
+        topo, lay = _hier(pods * 4, 4)
+        got.append(cross_pod_bytes(split_topology(topo, lay), P))
+    per_edge = got[0] // (2 * 1)
+    assert got == [pods * (pods - 1) * per_edge for pods in (2, 4, 8)]
+    # and the dispatched path undercuts the flat one
+    topo, lay = _hier(32, 4)
+    assert cross_pod_bytes(split_topology(topo, lay), P) \
+        < flat_exchange_bytes(topo, P)
+
+
+# ----------------------------------------------------------------------
+# reference decomposition vs the flat combine
+# ----------------------------------------------------------------------
+def test_reference_dispatch_one_pod_is_bitwise_combine_topo():
+    """The equivalence oracle that makes the refactor safe: with one
+    pod the leader segment vanishes statically and the dispatched
+    combine is the *same computation* as ``_combine_topo`` — bitwise,
+    not just close."""
+    rng = np.random.default_rng(0)
+    topo, lay = _hier(8, 8)
+    know = _rand_knowledge(rng, 8, 7)
+    ref = _combine_topo(know, topo)
+    got = make_pod_dispatch(topo, lay)(know)
+    np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                  np.asarray(got["w"]))
+
+
+@pytest.mark.parametrize("n,pod_size,rel_seed", [
+    (8, 4, None), (12, 4, None), (8, 2, 3), (12, 3, 5),
+])
+def test_reference_dispatch_matches_combine_topo(n, pod_size,
+                                                 rel_seed):
+    rng = np.random.default_rng(1)
+    topo, lay = _hier(n, pod_size, rel_seed)
+    know = _rand_knowledge(rng, n, 6)
+    ref = _combine_topo(know, topo)
+    got = make_pod_dispatch(topo, lay)(know)
+    np.testing.assert_allclose(np.asarray(ref["w"]),
+                               np.asarray(got["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_reference_dispatch_traced_relevance_override():
+    """The learned-R path feeds a *traced* per-edge table — the
+    dispatch must accept it as an argument (not a baked constant) and
+    match the flat combine with the same override."""
+    rng = np.random.default_rng(2)
+    topo, lay = _hier(8, 4)
+    know = _rand_knowledge(rng, 8, 5)
+    rel = jnp.asarray(rng.uniform(0.1, 1.0, (8, topo.degree)),
+                      jnp.float32)
+    rel = jnp.where(topo.mask, rel, 0.0)
+    combine = make_pod_dispatch(topo, lay)
+    got = jax.jit(lambda k, r: combine(k, r))(know, rel)
+    ref = _combine_topo(know, topo._replace(relevance=rel))
+    np.testing.assert_allclose(np.asarray(ref["w"]),
+                               np.asarray(got["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# GroupSpec wiring
+# ----------------------------------------------------------------------
+def test_groupspec_pod_validation():
+    GroupSpec(n_agents=8, topology="hierarchical", degree=4, pods=2)
+    with pytest.raises(ValueError, match="pods"):
+        GroupSpec(n_agents=8, pods=-1)
+    with pytest.raises(ValueError, match="hierarchical"):
+        GroupSpec(n_agents=8, topology="ring", pods=2)
+    with pytest.raises(ValueError, match="pods \\* degree"):
+        GroupSpec(n_agents=8, topology="hierarchical", degree=4,
+                  pods=3)
+    with pytest.raises(ValueError, match="pod_axis"):
+        GroupSpec(n_agents=8, topology="hierarchical", degree=4,
+                  pods=2, pod_axis="agent")
+    with pytest.raises(ValueError, match="pod_axis"):
+        GroupSpec(n_agents=8, topology="hierarchical", degree=4,
+                  pods=2, pod_axis="")
+
+
+def _toy_train_state(A, p, opt, seed=0):
+    from repro.core.sharded_ddal import TrainState, init_knowledge
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(A, p)), jnp.float32)}
+    return TrainState(params=params,
+                      opt_state=jax.vmap(opt.init)(params),
+                      know=init_knowledge(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _toy_step(spec, opt, mesh=None):
+    from repro.core.sharded_ddal import make_group_train_step
+
+    def loss_fn(params, batch):
+        return jnp.mean((params["w"] - batch["x"]) ** 2)
+
+    return jax.jit(make_group_train_step(
+        None, spec, opt, loss_fn=loss_fn, mesh=mesh))
+
+
+def _run_toy(spec, opt, steps=6, mesh=None, seed=0):
+    step = _toy_step(spec, opt, mesh)
+    state = _toy_train_state(spec.n_agents, 5, opt, seed)
+    rng = np.random.default_rng(7)
+    shared = 0
+    for _ in range(steps):
+        batch = {"x": jnp.asarray(
+            rng.normal(size=(spec.n_agents, 5)), jnp.float32)}
+        state, m = step(state, batch)
+        shared += int(m["shared"])
+    return state, shared
+
+
+def test_train_step_pod_dispatch_matches_flat_path():
+    """The full streaming train step with ``spec.pods > 0`` (reference
+    decomposition, no mesh) stays numerically on the flat path's
+    trajectory through warm-up and share steps."""
+    from repro import optim
+    opt = optim.sgd(0.1)
+    flat = GroupSpec(n_agents=8, threshold=2, minibatch=2,
+                     topology="hierarchical", degree=4)
+    pod = GroupSpec(n_agents=8, threshold=2, minibatch=2,
+                    topology="hierarchical", degree=4, pods=2)
+    s_flat, shared_flat = _run_toy(flat, opt)
+    s_pod, shared_pod = _run_toy(pod, opt)
+    assert shared_flat == shared_pod and shared_pod >= 1
+    np.testing.assert_allclose(np.asarray(s_flat.params["w"]),
+                               np.asarray(s_pod.params["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# the real collectives, on 8 simulated devices
+# ----------------------------------------------------------------------
+@pytest.mark.multi_device
+def test_sharded_dispatch_one_pod_bitwise_on_mesh(multi_device):
+    """Acceptance oracle: on a (1, 8) ``("pod", "agent")`` mesh the
+    dispatched path — all_gather over the agent axis, zero pod-axis
+    collectives — is bitwise identical to the flat single-mesh
+    ``_combine_topo``."""
+    from repro.launch.mesh import make_pod_mesh
+    rng = np.random.default_rng(0)
+    mesh = make_pod_mesh(1)
+    assert dict(mesh.shape) == {"pod": 1, "agent": 8}
+    topo, lay = _hier(8, 8)
+    know = _rand_knowledge(rng, 8, 5)
+    ref = _combine_topo(know, topo)
+    combine = make_pod_dispatch(topo, lay, mesh=mesh)
+    got = jax.jit(combine)(know)
+    np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                  np.asarray(got["w"]))
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("pods,rel_seed", [(2, None), (2, 11),
+                                           (4, None), (4, 13)])
+def test_sharded_dispatch_matches_flat_on_mesh(multi_device, pods,
+                                               rel_seed):
+    """Multi-pod meshes, both leader-exchange lowerings: the psum
+    fast path (uniform leader clique, ``rel_seed=None``) and the
+    weighted ppermute edge-list chain — against the flat oracle."""
+    from repro.launch.mesh import make_pod_mesh
+    rng = np.random.default_rng(4)
+    mesh = make_pod_mesh(pods)
+    topo, lay = _hier(8, 8 // pods, rel_seed)
+    know = _rand_knowledge(rng, 8, 6)
+    ref = _combine_topo(know, topo)
+    combine = make_pod_dispatch(topo, lay, mesh=mesh)
+    got = jax.jit(combine)(know)
+    np.testing.assert_allclose(np.asarray(ref["w"]),
+                               np.asarray(got["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.multi_device
+def test_sharded_dispatch_traced_override_on_mesh(multi_device):
+    """Regression: a traced per-edge relevance override must disable
+    the psum fast path even when the *static* table is uniform (the
+    learned-R path hits exactly this — uniform prior, traced
+    override), taking the weighted ppermute chain instead."""
+    from repro.launch.mesh import make_pod_mesh
+    rng = np.random.default_rng(9)
+    mesh = make_pod_mesh(2)
+    topo, lay = _hier(8, 4)              # uniform static relevance
+    know = _rand_knowledge(rng, 8, 5)
+    rel = jnp.asarray(rng.uniform(0.1, 1.0, (8, topo.degree)),
+                      jnp.float32)
+    rel = jnp.where(topo.mask, rel, 0.0)
+    combine = make_pod_dispatch(topo, lay, mesh=mesh)
+    got = jax.jit(lambda k, r: combine(k, r))(know, rel)
+    ref = _combine_topo(know, topo._replace(relevance=rel))
+    np.testing.assert_allclose(np.asarray(ref["w"]),
+                               np.asarray(got["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.multi_device
+def test_train_step_pod_dispatch_on_mesh(multi_device):
+    """End-to-end: the jitted streaming DDAL step with the shard_map
+    combine on a (2, 4) mesh tracks the flat path's trajectory."""
+    from repro import optim
+    from repro.launch.mesh import make_pod_mesh
+    opt = optim.sgd(0.1)
+    mesh = make_pod_mesh(2)
+    flat = GroupSpec(n_agents=8, threshold=1, minibatch=2,
+                     topology="hierarchical", degree=4)
+    pod = GroupSpec(n_agents=8, threshold=1, minibatch=2,
+                    topology="hierarchical", degree=4, pods=2)
+    s_flat, shared_flat = _run_toy(flat, opt)
+    s_pod, shared_pod = _run_toy(pod, opt, mesh=mesh)
+    assert shared_flat == shared_pod and shared_pod >= 2
+    np.testing.assert_allclose(np.asarray(s_flat.params["w"]),
+                               np.asarray(s_pod.params["w"]),
+                               rtol=1e-5, atol=1e-6)
