@@ -31,13 +31,20 @@ analytic cross-pod bytes per share step of the dispatched path
 decompositions. Acceptance: at fixed pod count the dispatched
 cross-pod bytes must not grow with agent count.
 
+Every run also writes machine-readable
+``BENCH_topology_scaling[_pods].json`` (override with ``--json``) so
+the perf trajectory is tracked across PRs, mirroring
+``bench_relevance_sketch.py``.
+
     PYTHONPATH=src python benchmarks/bench_topology_scaling.py \
-        [--smoke] [--hetero] [--pods]
+        [--smoke] [--hetero] [--pods] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -46,6 +53,24 @@ import numpy as np
 
 from repro.configs.base import GroupSpec
 from repro.core import DDAL
+
+def _default_json(mode: str) -> str:
+    """Per-mode default path so the --pods sweep doesn't clobber the
+    topology sweep's results (CI runs both)."""
+    tag = "" if mode == "sweep" else f"_{mode}"
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_topology_scaling{tag}.json")
+
+
+def write_json(path: str, mode: str, rows: list) -> None:
+    """Machine-readable results, same shape as
+    ``bench_relevance_sketch.py``'s emitter, so the perf trajectory
+    is diffable across PRs."""
+    payload = {"bench": "topology_scaling", "mode": mode,
+               "backend": jax.default_backend(), "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"wrote {path}")
 
 
 def flight_bytes(flight) -> int:
@@ -240,10 +265,12 @@ def bench_pod_row(pods: int, pod_size: int, n_params: int) -> dict:
     }
 
 
-def pod_sweep(args) -> list:
+def pod_sweep(args, json_path: "str | None" = None) -> list:
     """Pod-count sweep at fixed n, then agent-count sweep at fixed
     pods — the second is the scaling acceptance: dispatched cross-pod
-    bytes must be flat in n (they are O(pods · k_leader · |params|))."""
+    bytes must be flat in n (they are O(pods · k_leader · |params|)).
+    The JSON record is written *before* the acceptance check, so a
+    failing run still leaves its numbers behind for diagnosis."""
     n = 16 if args.smoke else 64
     pod_counts = [p for p in (1, 2, 4, 8) if p <= n // 2]
     rows = []
@@ -269,6 +296,8 @@ def pod_sweep(args) -> list:
                   for s in sizes]
     for r in agent_rows:
         show(r)
+    if json_path:
+        write_json(json_path, "pods", rows)
     ok_n = len({r["cross_mb"] for r in agent_rows}) == 1
     print(f"\nacceptance: cross-pod bytes at pods={fixed_pods} flat "
           f"in n ({[round(r['cross_mb'], 3) for r in agent_rows]} MB "
@@ -414,10 +443,14 @@ def main(argv=None):
     p.add_argument("--minibatch", type=int, default=5,
                    help="eq. 4 update cadence (paper uses 100)")
     p.add_argument("--max-delay", type=int, default=2)
+    p.add_argument("--json", default=None,
+                   help="machine-readable results path (defaults to "
+                        "BENCH_topology_scaling[_pods].json next to "
+                        "this file)")
     args = p.parse_args(argv)
 
     if args.pods:
-        return pod_sweep(args)
+        return pod_sweep(args, args.json or _default_json("pods"))
 
     sizes = [4, 16] if args.smoke else [4, 16, 64, 256]
     epochs = args.epochs or (5 if args.smoke else 20)
@@ -496,6 +529,7 @@ def main(argv=None):
                 print(f"{gossip:>8} {mode:>10} {r['cart_ret']:9.2f} "
                       f"{r['grid_ret']:9.3f} {r['rel_within']:9.3f} "
                       f"{r['rel_cross']:8.3f}")
+    write_json(args.json or _default_json("sweep"), "sweep", rows)
     return rows
 
 

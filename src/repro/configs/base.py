@@ -225,6 +225,13 @@ class GroupSpec:
     relevance_mode: str = "uniform"  # online R estimator: uniform |
                                      # grad_cos (repro.core.relevance)
     relevance_ema: float = 0.9   # EMA decay of the learned R estimate
+    relevance_sketch_dim: int = 0    # grad_cos at LLM scale: stream
+                                     # gradients through a seeded ±1
+                                     # projection into (n, d) sketches
+                                     # and cosine those — O(n·|params|)
+                                     # + O(n²·d) instead of
+                                     # O(n²·|params|); 0 = exact
+                                     # pairwise cosines
 
     def __post_init__(self):
         # deferred imports: repro.core modules import this module for
@@ -257,6 +264,16 @@ class GroupSpec:
             raise ValueError(
                 f"relevance_ema must be in [0, 1), got "
                 f"{self.relevance_ema}")
+        if self.relevance_sketch_dim < 0:
+            raise ValueError(
+                f"relevance_sketch_dim must be >= 0 (0 = exact "
+                f"pairwise cosines), got {self.relevance_sketch_dim}")
+        if (self.relevance_sketch_dim > 0
+                and self.relevance_mode != "grad_cos"):
+            raise ValueError(
+                f"relevance_sketch_dim > 0 sketches the grad_cos "
+                f"estimator and needs relevance_mode='grad_cos', got "
+                f"{self.relevance_mode!r}")
         if self.pods < 0:
             raise ValueError(f"pods must be >= 0, got {self.pods}")
         if self.pods > 0:

@@ -17,6 +17,7 @@ from repro.core.pod_dispatch import (  # noqa: F401
     cross_pod_bytes,
     flat_exchange_bytes,
     make_pod_dispatch,
+    relevance_exchange_bytes,
     split_topology,
 )
 from repro.core.sharded_ddal import (  # noqa: F401
@@ -28,8 +29,11 @@ from repro.core.sharded_ddal import (  # noqa: F401
 )
 from repro.core.relevance import (  # noqa: F401
     RELEVANCE_MODES,
+    cosine_rows,
+    fold_seed,
     grad_cosine,
     obs_overlap,
+    sketch_cosine,
 )
 from repro.core.topology import (  # noqa: F401
     TOPOLOGIES,

@@ -31,9 +31,12 @@ The graph itself can be adaptive (ISSUE 2): with
 ``repro.core.topology.DynamicTopology`` resampled inside the jitted
 epoch loop, and with ``spec.relevance_mode="grad_cos"`` the per-edge
 relevance fed to eq. 4 is learned online from gradient cosine
-similarity (``repro.core.relevance``), EMA-smoothed over share steps.
-Both default off, in which case the epoch step is bitwise-identical
-to the static path.
+similarity (``repro.core.relevance``), EMA-smoothed over share steps —
+exact pairwise cosines, or the streaming sketched estimate when
+``spec.relevance_sketch_dim > 0`` (ISSUE 4: O(n·|params|) streaming +
+O(n²·d) comparisons instead of O(n²·|params|), re-seeded per epoch so
+replay stays deterministic). Both default off, in which case the
+epoch step is bitwise-identical to the static path.
 """
 from __future__ import annotations
 
@@ -162,9 +165,16 @@ class DDAL:
         if spec.relevance_mode != "uniform":
             # EMA over share steps only (warm-up holds the prior);
             # effective R = static edge prior × learned estimate.
-            learned = REL.update_relevance(learned, grads,
-                                           spec.relevance_mode,
-                                           spec.relevance_ema, sharing)
+            # With spec.relevance_sketch_dim > 0 the observation is
+            # the streaming sketched cosine, re-seeded every epoch
+            # (rnd=epoch): replay with the same topology_seed is
+            # bit-deterministic, while the EMA averages the
+            # independent per-round projection errors away.
+            learned = REL.update_relevance(
+                learned, grads, spec.relevance_mode,
+                spec.relevance_ema, sharing,
+                sketch_dim=spec.relevance_sketch_dim,
+                seed=spec.topology_seed, rnd=epoch)
             eff = combine_relevance(topo.relevance,
                                     REL.gather_edges(learned, topo.nbr))
             topo = topo._replace(

@@ -125,12 +125,19 @@ def append_many(store: KnowledgeStore, pieces, T, R,
     )
 
 
-def weighted_average(store: KnowledgeStore, use_kernel: bool = False):
-    """eq. 4 over the store's valid pieces → (ḡ, total_weight)."""
+def weighted_average(store: KnowledgeStore, use_kernel: bool = False,
+                     interpret: "bool | None" = None):
+    """eq. 4 over the store's valid pieces → (ḡ, total_weight).
+
+    ``interpret=None`` (default) lets the kernel wrapper pick: compiled
+    Pallas on TPU, interpreter elsewhere (the old behaviour hardcoded
+    ``interpret=True``, so the kernel *always* ran interpreted — even
+    on TPU). Pass an explicit bool to override, e.g. tests forcing
+    the interpreter off-TPU."""
     w = eq4_weights(store.T, store.R, store.valid)
     if use_kernel:
         from repro.kernels.ddal_wavg import ops as wavg_ops
-        g = wavg_ops.tree_wavg(store.grads, w, interpret=True)
+        g = wavg_ops.tree_wavg(store.grads, w, interpret=interpret)
     else:
         g = tree_weighted_sum(store.grads, w)
     return g, jnp.sum(w)

@@ -24,6 +24,15 @@ step instead of O(n · k · |params|) — it scales with the number of
 pods, not the number of agents (``cross_pod_bytes`` /
 ``flat_exchange_bytes`` account both sides; the benchmark sweep in
 ``benchmarks/bench_topology_scaling.py --pods`` reports them).
+Learned relevance rides the same placement: with
+``GroupSpec.relevance_sketch_dim > 0`` the per-round gradient-cosine
+observation is computed on the carried (n, d) window sketches, so
+cross-pod relevance exchange is O(pods · n · d) bytes — never the
+parameter-sized accumulators the exact Gram would contract
+(``relevance_exchange_bytes`` accounts it, reported in
+``benchmarks/bench_relevance_sketch.py``'s JSON record; the
+no-parameter-sized-intermediate property itself is gated there by
+the jaxpr peak-intermediate check).
 
 Equivalence oracle: both paths reuse ``_edge_sums`` /
 ``_finish_combine`` from ``sharded_ddal``, and with one pod the
@@ -126,6 +135,22 @@ def cross_pod_bytes(edges: PodEdges, n_params: int,
     only the directed leader edges move data over the pod axis —
     O(pods · k_leader · |params|), independent of pod size."""
     return int(edges.ledge.sum()) * _edge_cost(n_params, dtype_bytes)
+
+
+def relevance_exchange_bytes(n_agents: int, n_params: int,
+                             sketch_dim: int,
+                             dtype_bytes: int = 4) -> int:
+    """Bytes the learned-relevance observation moves across the agent
+    sharding per share step (ISSUE 4). The exact ``grad_cos`` Gram
+    contracts the (A, P) window accumulators against themselves, so
+    every agent's parameter-sized ``rg`` rows cross the mesh —
+    O(A · |params|). The sketched estimator
+    (``GroupSpec.relevance_sketch_dim > 0``) gathers only the carried
+    (A, d) window sketches (``Knowledge.sk``) — O(A · d) bytes,
+    independent of |params|: at pod scale, O(pods · n · d) instead of
+    anything parameter-sized."""
+    per_row = n_params if sketch_dim <= 0 else sketch_dim
+    return n_agents * per_row * dtype_bytes
 
 
 def flat_exchange_bytes(topo: Topology, n_params: int,

@@ -15,11 +15,47 @@ relevance **online** instead of wiring it statically:
   ``relevance_mode="grad_cos"`` estimator threaded through
   ``repro.core.ddal.DDAL`` and the streaming trainer's
   ``_combine_topo`` segment-sum.
+* ``sketch_cosine`` — the same estimator at LLM scale: instead of the
+  exact O(n²·|params|) pairwise dots, each agent's gradient pytree is
+  streamed leaf-by-leaf through a seeded ±1 random projection
+  (``repro.kernels.grad_sketch``, sign-JL) into an (n, d) sketch, and
+  cosines are computed on sketches — O(n·|params|) streaming work
+  plus O(n²·d) comparisons, with **no (n, P) concat ever built**.
 * ``obs_overlap`` — a *static* prior from observation statistics: the
   Gaussian overlap of two agents' observation distributions (running
   mean/scale), for callers that can summarise their input streams.
   Attach it via ``Topology.with_relevance`` / the ``relevance=``
   argument of the group entry points.
+
+Sketch math and error bound
+---------------------------
+For a ±1/Rademacher projection S: (P, d) the sketched inner product
+``(G S)(G S)ᵀ / d`` is an unbiased estimate of the Gram ``G Gᵀ``, and
+the sketched cosine of a pair with true cosine ρ has standard error
+``≈ (1 − ρ²)/√d`` (Johnson–Lindenstrauss): d = 256 gives ≈ 0.06
+worst-case (ρ = 0), d = 1024 halves it. Pick d so that the *decision*
+eq. 4 makes — up-weight aligned agents, floor conflicting ones —
+survives the noise: d ≈ 256 separates cosines ~0.4 apart at ≥ 5σ,
+which is far coarser than the aligned (ρ → 1) vs unrelated (ρ → 0)
+split the estimator exists to detect; the EMA over share steps then
+averages *independently seeded* rounds (``fold_seed``), shrinking the
+residual error by √(#rounds) on top. ``relevance_sketch_dim = 0``
+selects the exact path.
+
+The sketch is **seeded per round**: signs are a pure function of
+``(seed, round, position, dim)``, so DynamicTopology replay — same
+topology_seed, same epoch sequence — reproduces the estimate
+bit-for-bit, while distinct rounds draw fresh projections (the EMA
+averaging above). Because the projection is linear and positional,
+the sketch of a gradient *sum* is the sum of per-piece sketches —
+the streaming trainer exploits this to carry a tiny (n, d) window
+sketch alongside its accumulators instead of re-deriving anything
+parameter-sized at share time (``repro.core.sharded_ddal``).
+
+Exact path: the Gram matrix is accumulated per-leaf
+(``Σ_leaf g_i · g_j``) in one pass over the pytree — the old
+``flatten_agents`` (n, P) fp32 concat, an extra HBM copy of every
+agent's gradients, is kept only as the test oracle.
 
 Estimates are kept as dense (n, n) ``R[src, dst]`` matrices — O(n²)
 *scalars*, negligible next to the O(n·k·D·|params|) delay line — so
@@ -43,7 +79,11 @@ RELEVANCE_MODES = ("uniform", "grad_cos")
 
 def flatten_agents(grads) -> jnp.ndarray:
     """Concatenate a pytree with leading (n,) agent axis into an
-    (n, P) matrix of flattened per-agent vectors."""
+    (n, P) matrix of flattened per-agent vectors.
+
+    Test oracle only: this materialises a full fp32 copy of every
+    agent's gradients. The production estimators (``grad_cosine``,
+    ``sketch_cosine``) stream the pytree leaf-by-leaf instead."""
     leaves = jax.tree.leaves(grads)
     n = leaves[0].shape[0]
     return jnp.concatenate(
@@ -51,20 +91,92 @@ def flatten_agents(grads) -> jnp.ndarray:
         axis=1)
 
 
-def grad_cosine(grads, eps: float = 1e-8) -> jnp.ndarray:
-    """Pairwise cosine similarity of per-agent gradients.
+def flatten_cosine(grads, eps: float = 1e-8) -> jnp.ndarray:
+    """The seed's exact estimator: flatten_agents builds the (n, P)
+    fp32 concat, then the shared ``cosine_rows`` tail — op for op the
+    pre-PR sequence. Kept ONLY as the equivalence oracle (tests and
+    ``bench_relevance_sketch``'s bitwise gate import this single
+    definition) — production paths stream per-leaf (``grad_cosine``)
+    or sketch (``sketch_cosine``)."""
+    return cosine_rows(flatten_agents(grads), eps)
 
-    grads: pytree with leading (n,) axis. Returns a symmetric (n, n)
-    matrix ``C[src, dst] ∈ [-1, 1]`` with ones on the diagonal (an
-    agent's own knowledge is always fully relevant to itself); an
-    all-zero gradient row yields cosine 0 against everyone else.
-    """
-    g = flatten_agents(grads)                          # (n, P)
+
+def _agent_rows(grads):
+    """Yield each leaf as an (n, p_leaf) fp32 matrix (a view-shaped
+    reshape + cast, one leaf at a time — never the full concat)."""
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    for x in leaves:
+        yield jnp.reshape(x, (n, -1)).astype(jnp.float32)
+
+
+def cosine_rows(g, eps: float = 1e-8) -> jnp.ndarray:
+    """Pairwise cosine similarity of the rows of an (n, p) matrix,
+    with ones on the diagonal and all-zero rows yielding cosine 0
+    against everyone else. The shared tail of ``grad_cosine`` (p = P)
+    and ``sketch_cosine`` (p = d) — the streaming trainer also calls
+    it directly on its carried window sketch."""
     norm = jnp.sqrt(jnp.sum(g * g, axis=1))            # (n,)
     gn = g / jnp.maximum(norm, eps)[:, None]
     c = jnp.clip(gn @ gn.T, -1.0, 1.0)
     n = c.shape[0]
     return jnp.where(jnp.eye(n, dtype=bool), 1.0, c)
+
+
+def grad_cosine(grads, eps: float = 1e-8) -> jnp.ndarray:
+    """Exact pairwise cosine similarity of per-agent gradients.
+
+    grads: pytree with leading (n,) axis. Returns a symmetric (n, n)
+    matrix ``C[src, dst] ∈ [-1, 1]`` with ones on the diagonal (an
+    agent's own knowledge is always fully relevant to itself); an
+    all-zero gradient row yields cosine 0 against everyone else.
+
+    Two streaming passes over the leaves — norms, then the Gram of
+    the normalised rows (``Σ_leaf ĝ_i · ĝ_j``) — so the peak
+    intermediate is one leaf, not the (n, P) concat the seed
+    estimator built. Single-leaf pytrees run the identical op
+    sequence as the flatten-based oracle (bitwise; pinned in tests);
+    multi-leaf trees reassociate the Σ over leaves (≤ 1 ulp drift).
+    """
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n,), jnp.float32)
+    for g in _agent_rows(grads):
+        sq = sq + jnp.sum(g * g, axis=1)
+    norm = jnp.sqrt(sq)                                # (n,)
+    denom = jnp.maximum(norm, eps)[:, None]
+    C = jnp.zeros((n, n), jnp.float32)
+    for g in _agent_rows(grads):
+        gn = g / denom
+        C = C + gn @ gn.T
+    c = jnp.clip(C, -1.0, 1.0)
+    return jnp.where(jnp.eye(n, dtype=bool), 1.0, c)
+
+
+def sketch_cosine(grads, dim: int, seed, eps: float = 1e-8, *,
+                  impl: str = "auto") -> jnp.ndarray:
+    """Sketched pairwise gradient cosines: stream the pytree through
+    the seeded ±1 projection (``repro.kernels.grad_sketch``) into an
+    (n, d) sketch, then cosine the sketch rows. Same contract as
+    ``grad_cosine`` (symmetric, unit diagonal, zero rows → 0) with
+    O((1 − ρ²)/√d) estimation error; ``seed`` may be traced — fold it
+    per round with ``fold_seed`` so replay is deterministic."""
+    from repro.kernels.grad_sketch import ops as sketch_ops
+    s = sketch_ops.sketch_pytree(grads, seed, dim, impl=impl)
+    return cosine_rows(s, eps)
+
+
+def fold_seed(seed, rnd) -> jnp.ndarray:
+    """Mix a base seed with a share-round index into the scalar seed
+    the sign hash consumes: distinct rounds draw independent
+    projections (the EMA averages their errors), identical
+    (seed, round) pairs replay bit-for-bit. Accepts traced inputs."""
+    from repro.kernels.grad_sketch.kernel import MIX_CONSTANTS
+    p1, p2, p3 = (jnp.uint32(c) for c in MIX_CONSTANTS)
+    x = (jnp.asarray(seed).astype(jnp.uint32) * p1
+         + jnp.asarray(rnd).astype(jnp.uint32) * p2)
+    x = (x ^ (x >> 16)) * p3
+    return (x ^ (x >> 13)).astype(jnp.int32)
 
 
 def to_relevance(cos, min_rel: float = 1e-3) -> jnp.ndarray:
@@ -100,15 +212,22 @@ def init_relevance(n: int) -> jnp.ndarray:
 
 
 def update_relevance(rel, grads, mode: str, decay: float,
-                     enabled=True) -> jnp.ndarray:
+                     enabled=True, *, sketch_dim: int = 0, seed=0,
+                     rnd=0, impl: str = "auto") -> jnp.ndarray:
     """One online step of the (n, n) relevance estimate: a no-op for
-    ``"uniform"``, an EMA toward the current gradient-cosine relevance
-    for ``"grad_cos"``."""
+    ``"uniform"``, an EMA toward the current gradient-cosine
+    relevance for ``"grad_cos"`` — exact pairwise cosines when
+    ``sketch_dim == 0``, the streaming sketched estimate (projection
+    seeded per ``(seed, rnd)``) otherwise."""
     if mode == "uniform":
         return rel
     if mode == "grad_cos":
-        return ema_update(rel, to_relevance(grad_cosine(grads)),
-                          decay, enabled)
+        if sketch_dim > 0:
+            cos = sketch_cosine(grads, sketch_dim,
+                                fold_seed(seed, rnd), impl=impl)
+        else:
+            cos = grad_cosine(grads)
+        return ema_update(rel, to_relevance(cos), decay, enabled)
     raise ValueError(
         f"unknown relevance mode {mode!r}; expected one of "
         f"{RELEVANCE_MODES}")

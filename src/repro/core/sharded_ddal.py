@@ -47,6 +47,19 @@ gradients (``Knowledge.rg``, already a temporal average over the
 share window), EMA-smoothed across share steps in ``Knowledge.rel``
 (``repro.core.relevance``). Both default off; the static path is
 untouched.
+
+Sketched relevance (ISSUE 4): with ``spec.relevance_sketch_dim > 0``
+the window additionally carries an (A, d) **gradient sketch**
+(``Knowledge.sk``): every accumulation step also streams that epoch's
+gradients through the seeded ±1 projection
+(``repro.kernels.grad_sketch``) and adds the tiny (A, d) result —
+the projection is linear and seeded per share round, so at share
+time ``sk`` *is* the sketch of ``rg`` (up to the knowledge-dtype
+cast) and the relevance observation is just ``cosine_rows(sk)``:
+O(A²·d) instead of the exact O(A²·|params|) Gram. Under the pod
+dispatch this is also what crosses the mesh for relevance — the (A, d)
+sketch rows (O(pods·A·d) bytes), never anything parameter-sized
+(``repro.core.pod_dispatch.relevance_exchange_bytes`` accounts it).
 """
 from __future__ import annotations
 
@@ -74,6 +87,8 @@ class Knowledge(NamedTuple):
     rg: Any
     rsum: jnp.ndarray     # (A,)
     rel: Any = None       # (A, A) learned R EMA; None = uniform mode
+    sk: Any = None        # (A, d) window gradient sketch; None = exact
+                          # relevance path (sketch_dim = 0)
 
 
 class TrainState(NamedTuple):
@@ -83,16 +98,21 @@ class TrainState(NamedTuple):
     step: jnp.ndarray     # () int32
 
 
-def init_knowledge(params, dtype=jnp.float32, rel=None) -> Knowledge:
+def init_knowledge(params, dtype=jnp.float32, rel=None,
+                   sketch_dim: int = 0) -> Knowledge:
     """Fresh (zeroed) share-window accumulators. ``rel`` is the learned
     relevance EMA to carry across the window reset — it persists over
-    share steps, unlike the window sums."""
+    share steps, unlike the window sums (``sketch_dim > 0`` adds the
+    (A, d) window sketch, which resets with them)."""
     A = jax.tree.leaves(params)[0].shape[0]
     acc = tree_map(lambda x: jnp.zeros(x.shape, jnp.dtype(dtype)),
                    params)
+    sk = (jnp.zeros((A, sketch_dim), jnp.float32)
+          if sketch_dim > 0 else None)
     return Knowledge(tg=acc, tsum=jnp.zeros((A,), jnp.float32),
                      rg=tree_zeros_like(acc),
-                     rsum=jnp.zeros((A,), jnp.float32), rel=rel)
+                     rsum=jnp.zeros((A,), jnp.float32), rel=rel,
+                     sk=sk)
 
 
 def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
@@ -102,12 +122,15 @@ def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
     keys = jax.random.split(key, spec.n_agents)
     params = jax.vmap(lambda k: model.init(cfg, k))(keys)
     opt_state = jax.vmap(opt.init)(params)
-    rel = (REL.init_relevance(spec.n_agents)
-           if spec.relevance_mode == "grad_cos" else None)
+    learn_rel = spec.relevance_mode == "grad_cos"
+    rel = REL.init_relevance(spec.n_agents) if learn_rel else None
     return TrainState(params=params, opt_state=opt_state,
                       know=init_knowledge(params,
                                           jnp.dtype(spec.knowledge_dtype),
-                                          rel=rel),
+                                          rel=rel,
+                                          sketch_dim=(
+                                              spec.relevance_sketch_dim
+                                              if learn_rel else 0)),
                       step=jnp.zeros((), jnp.int32))
 
 
@@ -235,6 +258,7 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
             return model.loss(cfg, params, batch)
     A = spec.n_agents
     learn_rel = spec.relevance_mode == "grad_cos"
+    sketch_dim = spec.relevance_sketch_dim if learn_rel else 0
     # full + uniform keeps the global-sum fast path; any named sparse
     # topology (or an explicit Topology) takes the segment-sum path.
     if topology is None and (spec.topology != "full"
@@ -318,22 +342,42 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                           know.tg, grads)
             rg = tree_map(lambda a, g: a + g.astype(kdt),
                           know.rg, grads)
+            sk = know.sk
+            if sketch_dim > 0:
+                # carry the window sketch: one streaming projection of
+                # this epoch's grads, added to the (A, d) running sum.
+                # The projection is linear and every step of the window
+                # ending at share step t folds the same round index
+                # ((step + mb − 1) // mb), so at share time sk IS the
+                # sketch of rg — nothing parameter-sized is re-read.
+                from repro.kernels.grad_sketch import ops as sketch_ops
+                seed_r = REL.fold_seed(
+                    spec.topology_seed,
+                    (step + spec.minibatch - 1) // spec.minibatch)
+                sk = know.sk + sketch_ops.sketch_pytree(
+                    grads, seed_r, sketch_dim)
             k2 = Knowledge(tg=tg, tsum=know.tsum + T_t,
-                           rg=rg, rsum=know.rsum + 1.0, rel=know.rel)
+                           rg=rg, rsum=know.rsum + 1.0, rel=know.rel,
+                           sk=sk)
 
             def do_share(_):
                 rel = k2.rel
                 if learn_rel:
                     # window-accumulated grads are already a temporal
                     # average over the share window — their cosine is
-                    # the per-window relevance observation.
-                    rel = REL.ema_update(
-                        rel, REL.to_relevance(REL.grad_cosine(k2.rg)),
-                        spec.relevance_ema)
+                    # the per-window relevance observation. Sketched
+                    # mode reads it off the carried (A, d) sketch:
+                    # O(A²·d), and only sketch rows (never parameter
+                    # planes) cross the mesh for relevance.
+                    obs = (REL.cosine_rows(k2.sk) if sketch_dim > 0
+                           else REL.grad_cosine(k2.rg))
+                    rel = REL.ema_update(rel, REL.to_relevance(obs),
+                                         spec.relevance_ema)
                 gbar = combine(k2, rel, step)
                 p2, o2 = vopt(gbar, state.opt_state, state.params, step)
                 return p2, o2, init_knowledge(state.params, kdt,
-                                              rel=rel)
+                                              rel=rel,
+                                              sketch_dim=sketch_dim)
 
             def hold(_):
                 return state.params, state.opt_state, k2

@@ -4,9 +4,16 @@
 pytree (leaves (m, *param_shape)) — the exact contraction DDAL's
 knowledge stores perform at every share step. Small leaves (< one
 tile) fall back to the jnp oracle: kernel launch overhead would
-dominate and XLA already fuses them.
+dominate and XLA already fuses them — that fallback path compiles on
+any backend with no interpreter involved.
+
+``interpret=None`` auto-selects: compiled Pallas on TPU, interpreter
+mode elsewhere (Pallas-TPU kernels cannot compile on CPU/GPU). An
+explicit bool overrides — tests force ``interpret=True`` off-TPU.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,20 +24,29 @@ from repro.kernels.ddal_wavg.kernel import DEFAULT_ROWS, LANES, wavg_flat
 _MIN_KERNEL_SIZE = DEFAULT_ROWS * LANES
 
 
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None → interpret off-TPU, compiled on TPU; bool → itself."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 def wavg(G: jnp.ndarray, w: jnp.ndarray, *,
-         interpret: bool = False) -> jnp.ndarray:
+         interpret: Optional[bool] = None) -> jnp.ndarray:
     """Σ_j w_j·G[j] for G: (m, N) → (N,) fp32."""
-    return wavg_flat(G, w, interpret=interpret)
+    return wavg_flat(G, w, interpret=resolve_interpret(interpret))
 
 
-def tree_wavg(grads_stacked, w, *, interpret: bool = False):
+def tree_wavg(grads_stacked, w, *, interpret: Optional[bool] = None):
     """Kernel-backed version of pytree eq. 4 contraction."""
+    interp = resolve_interpret(interpret)
+
     def leaf(x):
         m = x.shape[0]
         size = int(x.size) // m
         if size < _MIN_KERNEL_SIZE:
             return ref.wavg(x.reshape(m, -1), w).reshape(x.shape[1:])
         flat = x.reshape(m, size)
-        return wavg_flat(flat, w, interpret=interpret
+        return wavg_flat(flat, w, interpret=interp
                          ).reshape(x.shape[1:])
     return jax.tree.map(leaf, grads_stacked)

@@ -1,0 +1,8 @@
+"""Streaming gradient-sketch projection (sign-JL) for sketched
+relevance estimation — kernel (Pallas TPU), tiled XLA path, and jnp
+oracle. See ``repro.core.relevance.sketch_cosine`` for the consumer."""
+from repro.kernels.grad_sketch.kernel import sign_block  # noqa: F401
+from repro.kernels.grad_sketch.ops import (  # noqa: F401
+    sketch_leaf,
+    sketch_pytree,
+)

@@ -1,0 +1,117 @@
+"""Pallas-TPU kernel for the streaming gradient-sketch projection.
+
+The op projects a stacked per-agent gradient matrix G: (n, P) through
+a seeded random ±1 (Rademacher / sign-JL) matrix S: (P, d) into a
+small sketch G·S: (n, d). At LLM scale the projection is
+HBM-bandwidth-bound exactly like the eq. 4 contraction: the win is
+reading G **once**. The kernel walks (n, ROWS·128) slabs of G through
+VMEM, *regenerates* the matching (tile, d) sign block from a
+counter-based hash — the sign matrix is never stored anywhere, in HBM
+or elsewhere — and accumulates the (n, d) sketch tile in place across
+the sequential grid. HBM traffic is one pass over G plus one (n, d)
+write: the streaming floor.
+
+Signs are a pure function of ``(seed, global position, sketch dim)``
+(``sign_block``), so the sketch is independent of tiling, identical
+between this kernel, the tiled XLA fallback and the jnp oracle
+(``ref.py``), and — because the projection is linear and the signs
+depend only on position — sketches of gradient *sums* equal sums of
+sketches, which is what lets the streaming trainer carry an (n, d)
+window sketch instead of re-deriving it from the accumulators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_ROWS = 8               # tile = 8·128 = 1024 positions per step
+
+# xxhash/murmur-style 32-bit mixing constants (wrap-around uint32
+# arithmetic; both the kernel and the jnp reference run these exact
+# ops, so every path sees the same sign stream). Single source of
+# truth — ``repro.core.relevance.fold_seed`` mixes round indices with
+# the same constants.
+MIX_CONSTANTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D)
+_P1, _P2, _P3 = MIX_CONSTANTS
+
+
+def sign_block(seed, start, count: int, dim: int) -> jnp.ndarray:
+    """Deterministic ±1 fp32 block ``S[p - start, j]`` for global
+    positions p ∈ [start, start + count) and sketch dims j < dim.
+
+    Pure function of ``(seed, p, j)`` — independent of how callers
+    tile the position axis — built from 2D iotas (TPU-legal) and a
+    xorshift-multiply integer hash. ``seed``/``start`` may be traced
+    scalars; ``count``/``dim`` are static.
+    """
+    pos = jax.lax.broadcasted_iota(jnp.int32, (count, dim), 0)
+    dimi = jax.lax.broadcasted_iota(jnp.int32, (count, dim), 1)
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    x = (s
+         + (jnp.asarray(start).astype(jnp.uint32)
+            + pos.astype(jnp.uint32)) * jnp.uint32(_P1)
+         + dimi.astype(jnp.uint32) * jnp.uint32(_P2))
+    x = (x ^ (x >> 15)) * jnp.uint32(_P2)
+    x = (x ^ (x >> 13)) * jnp.uint32(_P3)
+    x = x ^ (x >> 16)
+    return 1.0 - 2.0 * (x >> 31).astype(jnp.float32)
+
+
+def _sketch_kernel(seed_ref, g_ref, o_ref, *, offset, tile, dim,
+                   total):
+    """seed_ref: (1, 1); g_ref: (n, TILE); o_ref: (n, d).
+
+    The output block is revisited by every grid step (TPU grids run
+    sequentially): step 0 zeroes it, every step accumulates its
+    slab's contribution G_tile @ S_tile. When ``total`` is not a
+    tile multiple the final block's overhang (whose contents Pallas
+    leaves undefined) is masked to zero in-register — G is never
+    padded or copied in HBM.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    start = i * tile
+    signs = sign_block(seed_ref[0, 0], offset + start, tile, dim)
+    g = g_ref[...].astype(jnp.float32)                   # (n, tile)
+    if total % tile:
+        pos = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1) + start
+        g = jnp.where(pos < total, g, 0.0)
+    o_ref[...] += jnp.dot(g, signs,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "offset", "rows",
+                                             "interpret"))
+def sketch_flat(G: jnp.ndarray, seed, dim: int, offset: int = 0,
+                rows: int = DEFAULT_ROWS,
+                interpret: bool = False) -> jnp.ndarray:
+    """G: (n, P) float, seed: () int → (n, d) fp32 = G @ S where
+    ``S[p, j] = sign_block(seed, offset + p, ...)``. The grid walks
+    ceil(P / tile) blocks of the position axis directly on the
+    unpadded G — the ragged final block is masked inside the kernel,
+    so the only HBM traffic is one read of G plus the (n, d) write."""
+    n, p = G.shape
+    tile = rows * LANES
+    tiles = (p + tile - 1) // tile
+    seed2 = jnp.reshape(jnp.asarray(seed, jnp.int32), (1, 1))
+
+    return pl.pallas_call(
+        functools.partial(_sketch_kernel, offset=offset, tile=tile,
+                          dim=dim, total=p),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dim), jnp.float32),
+        interpret=interpret,
+    )(seed2, G)

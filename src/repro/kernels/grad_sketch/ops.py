@@ -1,0 +1,123 @@
+"""jit'd wrappers for the gradient-sketch projection.
+
+``sketch_pytree`` is the production entry point: it streams a stacked
+gradient pytree (leaves (n, *param)) leaf-by-leaf into one (n, d)
+sketch, with offsets advancing by true leaf size so the result equals
+projecting the flat concatenation — which is never materialised.
+
+Implementation selection (``impl``):
+
+* ``"auto"``    — Pallas kernel on TPU (one HBM pass, signs
+  regenerated in VMEM), tiled XLA elsewhere. The CPU/GPU tiled path
+  is the same algorithm at XLA level: per-leaf chunks of
+  ``block`` positions, one (block, d) sign block live at a time.
+* ``"pallas"`` / ``"pallas_interpret"`` — force the kernel
+  (interpret mode runs it off-TPU; the kernel-vs-oracle tests use
+  this).
+* ``"xla"``     — force the tiled XLA path.
+
+Small leaves (< one kernel tile) always take the jnp reference — the
+launch overhead would dominate and XLA fuses them anyway. Leaves and
+sketch dims that don't meet the kernel's lane alignment (d % 128)
+fall back to the tiled XLA path rather than failing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grad_sketch import ref
+from repro.kernels.grad_sketch.kernel import (
+    DEFAULT_ROWS,
+    LANES,
+    sign_block,
+    sketch_flat,
+)
+
+_MIN_KERNEL_SIZE = DEFAULT_ROWS * LANES
+# XLA-path chunk: one (block, d) sign block is the only projection
+# intermediate ever live — 4·block·d bytes (4 MB at d = 256).
+DEFAULT_BLOCK = 4096
+# beyond this many chunks per leaf, roll the walk into a fori_loop —
+# unrolled static slices fuse (and run) better, but jaxpr size must
+# stay bounded for LLM-scale leaves
+_MAX_UNROLL = 64
+
+IMPLS = ("auto", "pallas", "pallas_interpret", "xla")
+
+
+def _resolve(impl: str) -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"unknown sketch impl {impl!r}; expected one "
+                         f"of {IMPLS}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def _xla_sketch_flat(G: jnp.ndarray, seed, dim: int, offset: int = 0,
+                     block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Tiled XLA projection: walk ``block``-position chunks of G so
+    only one (block, d) sign block exists at a time. Few-tile leaves
+    unroll (static slices fuse best); beyond ``_MAX_UNROLL`` tiles
+    the loop rolls into a ``fori_loop`` so program size stays O(1)
+    however large the leaf (a 4e8-position embedding would otherwise
+    unroll ~1e5 dot equations into the jaxpr). The short tail chunk
+    is one static trailing step: ``sign_block`` is positional, so no
+    padding copy of G is ever made."""
+    n, p = G.shape
+    tiles, tail = divmod(p, block)
+    acc = jnp.zeros((n, dim), jnp.float32)
+
+    def chunk(a, start, width):
+        g = jax.lax.slice_in_dim(G, start, start + width, axis=1)
+        s = sign_block(seed, offset + start, width, dim)
+        return a + jnp.dot(g.astype(jnp.float32), s,
+                           preferred_element_type=jnp.float32)
+
+    if tiles <= _MAX_UNROLL:
+        for t in range(tiles):
+            acc = chunk(acc, t * block, block)
+    else:
+        def body(i, a):
+            g = jax.lax.dynamic_slice_in_dim(G, i * block, block,
+                                             axis=1)
+            s = sign_block(seed, offset + i * block, block, dim)
+            return a + jnp.dot(g.astype(jnp.float32), s,
+                               preferred_element_type=jnp.float32)
+        acc = jax.lax.fori_loop(0, tiles, body, acc)
+    if tail:
+        acc = chunk(acc, tiles * block, tail)
+    return acc
+
+
+def sketch_leaf(x: jnp.ndarray, seed, dim: int, offset: int = 0, *,
+                impl: str = "auto") -> jnp.ndarray:
+    """One leaf (n, *param) → its (n, d) sketch contribution."""
+    n = x.shape[0]
+    p = int(x.size) // n
+    G = jnp.reshape(x, (n, p))
+    mode = _resolve(impl)
+    if p < _MIN_KERNEL_SIZE:
+        return ref.sketch_flat(G, seed, dim, offset=offset)
+    if mode.startswith("pallas") and dim % LANES == 0:
+        return sketch_flat(G, seed, dim, offset=offset,
+                           interpret=mode == "pallas_interpret")
+    return _xla_sketch_flat(G, seed, dim, offset=offset)
+
+
+def sketch_pytree(grads, seed, dim: int, *,
+                  impl: str = "auto") -> jnp.ndarray:
+    """Stream a stacked gradient pytree into its (n, d) sketch in one
+    pass — the (n, P) concat is never built. ``seed`` may be traced;
+    the sketch is a deterministic pure function of (seed, grads)."""
+    leaves = jax.tree.leaves(grads)
+    if not leaves:
+        raise ValueError("sketch_pytree needs at least one leaf")
+    n = leaves[0].shape[0]
+    acc = jnp.zeros((n, dim), jnp.float32)
+    offset = 0
+    for x in leaves:
+        acc = acc + sketch_leaf(x, seed, dim, offset, impl=impl)
+        offset += int(x.size) // n
+    return acc

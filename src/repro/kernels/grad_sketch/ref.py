@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the gradient-sketch projection kernel.
+
+Materialises the full (P, d) sign matrix, so it is only for tests and
+small leaves — the production paths (``ops.sketch_flat`` tiled XLA /
+Pallas) regenerate signs block-by-block and never hold more than one
+tile. All paths share ``kernel.sign_block``, so they agree on the
+sign stream exactly; only fp accumulation order differs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grad_sketch.kernel import sign_block
+
+
+def sketch_flat(G: jnp.ndarray, seed, dim: int,
+                offset: int = 0) -> jnp.ndarray:
+    """G: (n, P), seed: () int → (n, d) fp32 one-shot projection."""
+    p = G.shape[1]
+    S = sign_block(seed, offset, p, dim)                   # (P, d)
+    return jnp.dot(G.astype(jnp.float32), S,
+                   preferred_element_type=jnp.float32)
+
+
+def sketch_pytree(grads, seed, dim: int) -> jnp.ndarray:
+    """Leaf-by-leaf oracle: offsets advance by true leaf size, so the
+    result equals projecting the flat concatenation (``sketch_oracle``)
+    up to fp summation order."""
+    leaves = jax.tree.leaves(grads)
+    n = leaves[0].shape[0]
+    acc = jnp.zeros((n, dim), jnp.float32)
+    offset = 0
+    for x in leaves:
+        p = int(x.size) // n
+        acc = acc + sketch_flat(jnp.reshape(x, (n, p)), seed, dim,
+                                offset=offset)
+        offset += p
+    return acc
+
+
+def sketch_oracle(grads, seed, dim: int) -> jnp.ndarray:
+    """The dense reference the streaming pass must reproduce: flatten
+    every agent's gradients into one (n, P) matrix (the exact HBM copy
+    the streaming estimator exists to avoid) and project it in one
+    matmul."""
+    from repro.core.relevance import flatten_agents
+    g = flatten_agents(grads)
+    return sketch_flat(g, seed, dim)

@@ -116,7 +116,8 @@ def lower_train(cfg: ArchConfig, shape: ShapeConfig, mesh,
     state_shapes = train_state_specs(cfg, spec, opt)
     state_specs = train_state_partition_specs(
         cfg, rules, agent_axis,
-        learn_relevance=spec.relevance_mode == "grad_cos")
+        learn_relevance=spec.relevance_mode == "grad_cos",
+        sketch_dim=spec.relevance_sketch_dim)
     batch_shapes = _with_lead(input_specs(cfg, shape), spec.n_agents)
     bspecs = batch_partition_specs(cfg, shape, rules["batch"],
                                    lead=(agent_axis,))

@@ -137,20 +137,26 @@ def cache_partition_specs(cfg: ArchConfig, shape: ShapeConfig,
 # -- TrainState (adamw layout) ----------------------------------------
 def train_state_partition_specs(cfg: ArchConfig, rules: dict,
                                 agent_axis: Axis,
-                                learn_relevance: bool = False) -> Any:
+                                learn_relevance: bool = False,
+                                sketch_dim: int = 0) -> Any:
     """Specs for repro.core.sharded_ddal.TrainState with an AdamW
     optimiser (m/v mirror params; count/step are scalars). With
     ``learn_relevance`` (``GroupSpec.relevance_mode="grad_cos"``) the
     state carries the (A, A) learned relevance EMA — rows shard over
-    the agent axis like the other per-agent leaves."""
+    the agent axis like the other per-agent leaves — and with
+    ``sketch_dim > 0`` also the (A, d) window gradient sketch
+    (``Knowledge.sk``), likewise row-sharded: the cosine on it is the
+    only cross-agent relevance contraction, moving O(A·d) bytes."""
     from repro.core.sharded_ddal import Knowledge, TrainState
     pspec = param_partition_specs(cfg, rules, lead=(agent_axis,))
     vec = P(agent_axis)
     rel = P(agent_axis, None) if learn_relevance else None
+    sk = P(agent_axis, None) if (learn_relevance
+                                 and sketch_dim > 0) else None
     return TrainState(
         params=pspec,
         opt_state={"m": pspec, "v": pspec, "count": vec},
         know=Knowledge(tg=pspec, tsum=vec, rg=pspec, rsum=vec,
-                       rel=rel),
+                       rel=rel, sk=sk),
         step=P(),
     )

@@ -55,6 +55,16 @@ def main(argv=None):
     p.add_argument("--relevance-ema", type=float, default=0.9,
                    help="EMA decay of the learned relevance estimate "
                         "across share steps (grad_cos only)")
+    p.add_argument("--relevance-sketch-dim", type=int, default=0,
+                   help="sketched streaming relevance (grad_cos "
+                        "only): project each agent's gradients "
+                        "through a seeded ±1 random projection into "
+                        "an (agents, d) sketch and estimate cosines "
+                        "on sketches — O(agents·|params|) streaming "
+                        "+ O(agents²·d) comparisons instead of "
+                        "O(agents²·|params|); 0 = exact pairwise "
+                        "cosines (d ≈ 256 keeps worst-case cosine "
+                        "error ≈ 0.06 before EMA averaging)")
     p.add_argument("--full", action="store_true",
                    help="full (not reduced) config — TPU pods only")
     p.add_argument("--mesh", default="cpu",
@@ -91,6 +101,7 @@ def main(argv=None):
                      resample_every=args.resample_every,
                      relevance_mode=args.relevance_mode,
                      relevance_ema=args.relevance_ema,
+                     relevance_sketch_dim=args.relevance_sketch_dim,
                      knowledge_mode="streaming")
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
     opt = optim.adamw(args.lr)
