@@ -232,10 +232,25 @@ class GroupSpec:
                                      # + O(n²·d) instead of
                                      # O(n²·|params|); 0 = exact
                                      # pairwise cosines
+    # -- exchange-protocol strategy overrides (repro.core.exchange) ---
+    # "auto" derives each strategy from the legacy flags above (the
+    # bitwise-pinned mapping); explicit keys select registered
+    # strategies directly — e.g. exchange_schedule="relevance_topk"
+    # (Gumbel top-k gossip over the learned R) or
+    # exchange_estimator="obs_stats" (observation-overlap relevance).
+    exchange_schedule: str = "auto"   # auto | static | dynamic |
+                                      # relevance_topk
+    exchange_estimator: str = "auto"  # auto | uniform | grad_cos |
+                                      # grad_cos+sketch | obs_stats
+    exchange_delay: str = "auto"      # auto | none | uniform | hops
+    exchange_combiner: str = "auto"   # auto | flat | pod | store
+    explore_eps: float = 0.1          # relevance_topk: per-destination
+                                      # ε-greedy uniform-gossip rate
 
     def __post_init__(self):
         # deferred imports: repro.core modules import this module for
         # the dataclass, so the name tables must resolve lazily.
+        from repro.core.exchange import validate_choice
         from repro.core.relevance import RELEVANCE_MODES
         from repro.core.topology import TOPOLOGIES
         if self.topology not in TOPOLOGIES:
@@ -253,6 +268,27 @@ class GroupSpec:
             raise ValueError(
                 f"resample_every > 0 needs topology='random_k', got "
                 f"{self.topology!r}")
+        validate_choice("schedule", self.exchange_schedule)
+        validate_choice("estimator", self.exchange_estimator)
+        validate_choice("delay", self.exchange_delay)
+        validate_choice("combiner", self.exchange_combiner)
+        if self.exchange_schedule == "relevance_topk":
+            if self.topology != "random_k" or self.resample_every < 1:
+                raise ValueError(
+                    "exchange_schedule='relevance_topk' resamples a "
+                    "gossip graph and needs topology='random_k' with "
+                    "resample_every >= 1, got "
+                    f"topology={self.topology!r}, "
+                    f"resample_every={self.resample_every}")
+        if self.exchange_schedule == "static" and self.resample_every:
+            raise ValueError(
+                "exchange_schedule='static' pins a fixed graph but "
+                f"resample_every={self.resample_every} requests "
+                "resampling — drop one of them")
+        if not 0.0 <= self.explore_eps <= 1.0:
+            raise ValueError(
+                f"explore_eps must be in [0, 1], got "
+                f"{self.explore_eps}")
         if self.topology == "random_k":
             if not 1 <= self.degree < max(self.n_agents, 2):
                 raise ValueError(
@@ -268,11 +304,20 @@ class GroupSpec:
             raise ValueError(
                 f"relevance_sketch_dim must be >= 0 (0 = exact "
                 f"pairwise cosines), got {self.relevance_sketch_dim}")
+        if (self.exchange_estimator not in ("auto", "grad_cos+sketch")
+                and self.relevance_sketch_dim > 0):
+            raise ValueError(
+                f"exchange_estimator={self.exchange_estimator!r} "
+                "does not sketch and would silently ignore "
+                f"relevance_sketch_dim={self.relevance_sketch_dim} — "
+                "use 'grad_cos+sketch' (or drop the dim)")
         if (self.relevance_sketch_dim > 0
-                and self.relevance_mode != "grad_cos"):
+                and self.relevance_mode != "grad_cos"
+                and self.exchange_estimator != "grad_cos+sketch"):
             raise ValueError(
                 f"relevance_sketch_dim > 0 sketches the grad_cos "
-                f"estimator and needs relevance_mode='grad_cos', got "
+                f"estimator and needs relevance_mode='grad_cos' (or "
+                f"exchange_estimator='grad_cos+sketch'), got "
                 f"{self.relevance_mode!r}")
         if self.pods < 0:
             raise ValueError(f"pods must be >= 0, got {self.pods}")

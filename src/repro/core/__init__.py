@@ -1,7 +1,19 @@
 """The paper's primary contribution: GARL formulation + DDAL learning
 framework (knowledge stores, eq. 4 weighting, async delay lines, and
-the pod-scale sharded variant)."""
+the pod-scale sharded variant). Everything configurable about the
+knowledge exchange lives behind one strategy API —
+``repro.core.exchange`` (``build_exchange`` assembles an
+``ExchangeProtocol`` from a ``GroupSpec``); both trainers are thin
+loops over it."""
 from repro.core.ddal import DDAL, GroupState  # noqa: F401
+from repro.core.exchange import (  # noqa: F401
+    COMBINERS,
+    DELAYS,
+    ESTIMATORS,
+    SCHEDULES,
+    ExchangeProtocol,
+    build_exchange,
+)
 from repro.core.group_mdp import AgentEnv, GroupMDP  # noqa: F401
 from repro.core.knowledge import (  # noqa: F401
     InFlight,

@@ -26,17 +26,17 @@ neighbor-indexed ``SparseInFlight`` delay line — O(n·k·D) memory — and
 the dense all-to-all of the seed is recovered exactly by the ``full``
 topology (k = n).
 
-The graph itself can be adaptive (ISSUE 2): with
-``spec.resample_every > 0`` the gossip table is a
-``repro.core.topology.DynamicTopology`` resampled inside the jitted
-epoch loop, and with ``spec.relevance_mode="grad_cos"`` the per-edge
-relevance fed to eq. 4 is learned online from gradient cosine
-similarity (``repro.core.relevance``), EMA-smoothed over share steps —
-exact pairwise cosines, or the streaming sketched estimate when
-``spec.relevance_sketch_dim > 0`` (ISSUE 4: O(n·|params|) streaming +
-O(n²·d) comparisons instead of O(n²·|params|), re-seeded per epoch so
-replay stays deterministic). Both default off, in which case the
-epoch step is bitwise-identical to the static path.
+Everything configurable about the exchange — which graph is in force,
+how per-edge relevance is estimated, how stale knowledge is on
+arrival, how gathered knowledge becomes one update — lives in one
+:class:`repro.core.exchange.ExchangeProtocol` (ISSUE 5), assembled
+from the spec by ``build_exchange``. ``epoch_step`` is a thin loop
+over it: ``topology_at`` → ``observe`` → ``apply_relevance`` → the
+delay lines → ``combine``. The default (``"auto"``) strategies
+reproduce every legacy ``GroupSpec`` flag spelling bitwise; new
+scenarios (relevance-aware ``relevance_topk`` resampling,
+``obs_stats`` relevance) are registered strategies, not new trainer
+branches.
 """
 from __future__ import annotations
 
@@ -48,13 +48,9 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_map
 from repro.configs.base import GroupSpec
 from repro.core import knowledge as K
-from repro.core import relevance as REL
-from repro.core.topology import (
-    DynamicTopology,
-    Topology,
-    make_topology,
-)
-from repro.core.weighting import combine_relevance, training_experience
+from repro.core.exchange import ExchangeProtocol, build_exchange
+from repro.core.topology import DynamicTopology, Topology
+from repro.core.weighting import training_experience
 
 
 class GroupState(NamedTuple):
@@ -62,7 +58,10 @@ class GroupState(NamedTuple):
     stores: K.KnowledgeStore   # leading (n,)
     flight: K.SparseInFlight
     epoch: jnp.ndarray         # () int32
-    relevance: jnp.ndarray     # (n, n) learned R EMA (ones = uniform)
+    relevance: Any             # estimator state — the (n, n) learned R
+                               # EMA for the gradient estimators (ones
+                               # = uniform), a moments pytree for
+                               # obs_stats
     nbr: jnp.ndarray           # (n, k) current gossip table (static
                                # topologies carry it untouched)
 
@@ -85,50 +84,51 @@ class DDAL:
                  delay: Optional[jnp.ndarray] = None,
                  topology: Optional[Union[Topology,
                                           DynamicTopology]] = None,
-                 use_wavg_kernel: bool = False):
-        """``topology`` overrides the graph named by ``spec.topology``
-        (a ``DynamicTopology`` makes the gossip table time-varying);
-        ``relevance`` / ``delay`` accept either dense (n, n) src→dst
-        matrices (seed-compatible) or per-edge (n, k) arrays and are
-        attached onto the topology's edge table — dynamic topologies
-        accept only the dense (or scalar delay) forms, which are
-        re-gathered after every resample."""
+                 use_wavg_kernel: bool = False,
+                 exchange: Optional[ExchangeProtocol] = None,
+                 obs_dim: Optional[int] = None):
+        """``exchange`` supplies a prebuilt protocol; otherwise one is
+        assembled from ``spec`` with ``topology`` overriding the graph
+        named by ``spec.topology`` (a ``DynamicTopology`` makes the
+        gossip table time-varying) and ``relevance`` / ``delay``
+        accepting either dense (n, n) src→dst matrices
+        (seed-compatible) or per-edge (n, k) arrays attached onto the
+        topology's edge table — dynamic topologies accept only the
+        dense (or scalar delay) forms, which are re-gathered after
+        every resample. ``obs_dim`` is needed only by the
+        ``obs_stats`` estimator (the rl entry points forward it)."""
         self.spec = spec
         self.gen_grads = gen_grads
         self.apply_grads = apply_grads
         self.params_of = params_of       # agent_state -> params pytree
-        if topology is None:
-            topology = make_topology(spec, delay=delay,
-                                     relevance=relevance)
-            relevance = delay = None     # consumed by make_topology
-        if isinstance(topology, DynamicTopology):
-            topology = topology.with_dense(delay=delay,
-                                           relevance=relevance)
-            if topology.dense_delay is None:
-                topology._uniform_base_delay()   # validate early, not in jit
-            self.static_topology = topology.base
+        if exchange is None:
+            exchange = build_exchange(
+                spec, kind="buffer", topology=topology,
+                relevance=relevance, delay=delay, obs_dim=obs_dim,
+                use_wavg_kernel=use_wavg_kernel)
+        elif exchange.kind != "buffer":
+            raise ValueError(
+                f"DDAL needs a 'buffer' exchange protocol, got "
+                f"{exchange.kind!r}")
         else:
-            if relevance is not None:
-                topology = topology.with_relevance(relevance)
-            if delay is not None:
-                topology = topology.with_delay(delay)
-            self.static_topology = topology
-        self.topology = topology
-        self.dynamic = isinstance(topology, DynamicTopology)
-        self.max_delay = max(topology.max_delay, spec.max_delay)
+            stale = [name for name, v in
+                     [("topology", topology), ("relevance", relevance),
+                      ("delay", delay), ("obs_dim", obs_dim),
+                      ("use_wavg_kernel", use_wavg_kernel or None)]
+                     if v is not None]
+            if stale:
+                raise ValueError(
+                    f"{', '.join(stale)} would be silently ignored: "
+                    f"these are baked into the protocol at build time "
+                    f"— pass them to build_exchange(...) instead of "
+                    f"to DDAL when supplying a prebuilt exchange")
+        self.exchange = exchange
+        # introspection back-compat (benchmarks, tests)
+        self.topology = exchange.schedule.topology
+        self.static_topology = exchange.static_topology
+        self.dynamic = isinstance(self.topology, DynamicTopology)
+        self.max_delay = exchange.max_delay
         self.use_wavg_kernel = use_wavg_kernel
-
-    # ------------------------------------------------------------------
-    def _topology_at(self, epoch, nbr):
-        """(topology in force at ``epoch``, carried gossip table).
-        Dynamic topologies refresh the table only at resample-round
-        boundaries (a ``lax.cond`` over the tiny (n, k) table — the
-        O(n² log n) sampler is skipped on off-boundary epochs)."""
-        if not self.dynamic or self.topology.resample_every <= 0:
-            return self.static_topology if self.dynamic \
-                else self.topology, nbr
-        nbr = self.topology.refresh_table(epoch, nbr)
-        return self.topology.with_table(nbr), nbr
 
     # ------------------------------------------------------------------
     def init(self, agent_states) -> GroupState:
@@ -143,14 +143,14 @@ class DDAL:
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
                           epoch=jnp.zeros((), jnp.int32),
-                          relevance=REL.init_relevance(n),
-                          nbr=jnp.asarray(self.static_topology.nbr,
-                                          jnp.int32))
+                          relevance=self.exchange.init_relevance(),
+                          nbr=self.exchange.init_table())
 
     # ------------------------------------------------------------------
     def epoch_step(self, gs: GroupState, keys) -> Tuple[GroupState, Any]:
         """One epoch for the whole group. keys: (n,) PRNG keys."""
         spec = self.spec
+        ex = self.exchange
         n = spec.n_agents
         epoch = gs.epoch
         grads, metrics, astates = jax.vmap(self.gen_grads)(
@@ -159,26 +159,15 @@ class DDAL:
         warmup = epoch < spec.threshold
         sharing = jnp.logical_not(warmup)
 
-        # --- adaptive wiring: resample gossip, learn relevance --------
-        topo, nbr = self._topology_at(epoch, gs.nbr)
-        learned = gs.relevance
-        if spec.relevance_mode != "uniform":
-            # EMA over share steps only (warm-up holds the prior);
-            # effective R = static edge prior × learned estimate.
-            # With spec.relevance_sketch_dim > 0 the observation is
-            # the streaming sketched cosine, re-seeded every epoch
-            # (rnd=epoch): replay with the same topology_seed is
-            # bit-deterministic, while the EMA averages the
-            # independent per-round projection errors away.
-            learned = REL.update_relevance(
-                learned, grads, spec.relevance_mode,
-                spec.relevance_ema, sharing,
-                sketch_dim=spec.relevance_sketch_dim,
-                seed=spec.topology_seed, rnd=epoch)
-            eff = combine_relevance(topo.relevance,
-                                    REL.gather_edges(learned, topo.nbr))
-            topo = topo._replace(
-                relevance=jnp.where(topo.mask, eff, 0.0))
+        # --- the exchange protocol: graph, relevance, staleness ------
+        # (all strategy decisions were resolved at build time — the
+        # default strategies trace exactly the legacy ops)
+        topo, nbr = ex.topology_at(epoch, gs.nbr, gs.relevance)
+        aux = (metrics.get("obs_moments")
+               if ex.wants_obs and isinstance(metrics, dict) else None)
+        learned = ex.observe(gs.relevance, grads=grads, aux=aux,
+                             rnd=epoch, enabled=sharing)
+        topo = ex.apply_relevance(topo, learned)
 
         # --- lines 8–10: append + async exchange over the graph -------
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
@@ -205,9 +194,7 @@ class DDAL:
             return jax.vmap(self.apply_grads)(states, grads)
 
         def group_update(states):
-            gbar, wsum = jax.vmap(
-                lambda st: K.weighted_average(st, self.use_wavg_kernel))(
-                stores)
+            gbar, wsum = ex.combine(stores, learned, epoch)
             updated = jax.vmap(self.apply_grads)(states, gbar)
             # only update agents with ≥1 valid piece in store
             return _tree_select(wsum > 0, updated, states)

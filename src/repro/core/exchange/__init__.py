@@ -1,0 +1,63 @@
+"""One exchange-protocol API for DDAL knowledge exchange.
+
+DDAL (paper §4–5) is one protocol with four orthogonal axes — *which
+graph* (:class:`TopologySchedule`), *how relevant* (:class:`
+RelevanceEstimator`), *how stale* (:class:`DelayModel`), and *how
+combined* (:class:`Combiner`). :func:`build_exchange` assembles one
+:class:`ExchangeProtocol` from a ``GroupSpec`` via the string-keyed
+registries, and **both** trainers (`repro.core.ddal.DDAL`,
+`repro.core.sharded_ddal.make_group_train_step`) are thin loops over
+it — adding a scenario means registering a strategy, not threading a
+flag through two trainers. See ``docs/exchange.md`` for the interface
+contracts, a worked custom-estimator example, and the migration table
+from the legacy ``GroupSpec`` flags.
+"""
+from repro.core.exchange.build import (
+    KINDS,
+    ExchangeProtocol,
+    build_exchange,
+)
+from repro.core.exchange.combiners import Combiner
+from repro.core.exchange.delays import DelayModel
+from repro.core.exchange.estimators import (
+    ObsStatsState,
+    RelevanceEstimator,
+)
+from repro.core.exchange.registry import (
+    COMBINERS,
+    DELAYS,
+    ESTIMATORS,
+    REGISTRIES,
+    SCHEDULES,
+    Registry,
+    cli_options,
+    validate_choice,
+)
+from repro.core.exchange.schedules import (
+    DynamicSchedule,
+    RelevanceTopKSchedule,
+    StaticSchedule,
+    TopologySchedule,
+)
+
+__all__ = [
+    "KINDS",
+    "ExchangeProtocol",
+    "build_exchange",
+    "TopologySchedule",
+    "StaticSchedule",
+    "DynamicSchedule",
+    "RelevanceTopKSchedule",
+    "RelevanceEstimator",
+    "ObsStatsState",
+    "DelayModel",
+    "Combiner",
+    "Registry",
+    "REGISTRIES",
+    "SCHEDULES",
+    "ESTIMATORS",
+    "DELAYS",
+    "COMBINERS",
+    "cli_options",
+    "validate_choice",
+]

@@ -1,0 +1,148 @@
+"""Combiners — *how gathered knowledge becomes one update*.
+
+A :class:`Combiner` is the eq. 4 aggregation step, resolved **once at
+build time** into a ``combine(knowledge, rel, step)`` closure so the
+jitted trainers contain exactly the ops of the chosen strategy — no
+runtime dispatch, which is what keeps every pre-redesign
+configuration bitwise-reproducible. Three strategies are registered:
+
+``flat``
+    The streaming trainer's single-mesh combine. ``full`` + uniform
+    keeps the global-sum fast path (:func:`repro.core.sharded_ddal.
+    _combine`); any real topology takes the neighbor-local segment-sum
+    (:func:`repro.core.sharded_ddal._combine_topo`), re-gathering the
+    learned relevance onto the step's edge table.
+``pod``
+    The two-level multi-host dispatch (:func:`repro.core.pod_dispatch.
+    make_pod_dispatch`): intra-pod sums on the fast ``"agent"`` mesh
+    axis, only pod leaders' planes crossing ``GroupSpec.pod_axis``.
+    Static hierarchical topologies only.
+``store``
+    The buffer trainer's piece-faithful eq. 4 weighted average over
+    each agent's knowledge store (:func:`repro.core.knowledge.
+    weighted_average`), optionally through the Pallas wavg kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exchange.registry import COMBINERS
+from repro.core.exchange.schedules import StaticSchedule
+from repro.core import relevance as REL
+from repro.core.weighting import combine_relevance, relevance_matrix
+
+
+class Combiner:
+    """Interface: ``combine(knowledge, rel, step)``.
+
+    ``knowledge`` is trainer-shaped — the streaming
+    :class:`~repro.core.sharded_ddal.Knowledge` window for
+    ``flat``/``pod`` (returning the per-destination ḡ pytree), the
+    vmapped :class:`~repro.core.knowledge.KnowledgeStore` for
+    ``store`` (returning ``(ḡ, weight_sum)``). ``rel`` is the dense
+    learned relevance matrix (``None`` when nothing is learned);
+    ``step`` resolves time-varying topologies.
+    """
+
+    def __call__(self, knowledge, rel, step):
+        raise NotImplementedError
+
+
+def _edge_effective(topo, rel):
+    """Per-edge effective relevance: static prior × learned estimate,
+    re-gathered onto (a possibly traced) edge table — the shared tail
+    both trainers used to duplicate."""
+    eff = combine_relevance(topo.relevance,
+                            REL.gather_edges(rel, topo.nbr))
+    return topo._replace(relevance=jnp.where(topo.mask, eff, 0.0))
+
+
+@COMBINERS.register("flat",
+                    params={"r_weighting": ("r_weighting", str)})
+def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
+                       mesh=None, use_wavg_kernel=False) -> Combiner:
+    """Streaming single-mesh combine. ``schedule=None`` marks the
+    topology-free case (``full`` graph, no explicit object): the
+    global-sum fast path when nothing weights the edges, the dense
+    eq. 4 matmul otherwise."""
+    del mesh, use_wavg_kernel
+    from repro.core.sharded_ddal import _combine, _combine_topo
+    A = spec.n_agents
+    learns = estimator.learns
+
+    if schedule is None:
+        uniform = (dense_R is None and spec.r_weighting == "uniform"
+                   and not learns)
+        R = (dense_R if dense_R is not None
+             else relevance_matrix(A, "uniform"))
+        if learns:
+            def combine(knowledge, rel, step):
+                del step
+                return _combine(knowledge, combine_relevance(R, rel),
+                                uniform=False)
+        else:
+            def combine(knowledge, rel, step):
+                del rel, step
+                return _combine(knowledge, R, uniform)
+        return combine
+
+    if learns:
+        def combine(knowledge, rel, step):
+            topo = _edge_effective(schedule.at_step(step, rel), rel)
+            return _combine_topo(knowledge, topo)
+    else:
+        def combine(knowledge, rel, step):
+            del rel
+            return _combine_topo(knowledge,
+                                 schedule.at_step(step, None))
+    return combine
+
+
+@COMBINERS.register("pod",
+                    params={"pods": ("pods", int),
+                            "pod_axis": ("pod_axis", str)})
+def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
+                      mesh=None, use_wavg_kernel=False) -> Combiner:
+    """Two-level pod dispatch over a static hierarchical topology."""
+    del dense_R, use_wavg_kernel
+    from repro.core.pod_dispatch import make_pod_dispatch
+    from repro.core.topology import hierarchical_layout
+    if schedule is None or not isinstance(schedule, StaticSchedule):
+        raise ValueError(
+            "the 'pod' combiner needs a static hierarchical topology "
+            f"(got schedule "
+            f"{type(schedule).__name__ if schedule else None}) — "
+            "resampling schedules cannot be pod-dispatched: a swapped "
+            "edge could cross pods without touching a leader")
+    topology = schedule.base
+    layout = hierarchical_layout(spec.n_agents, spec.degree)
+    pod_combine = make_pod_dispatch(topology, layout, mesh=mesh,
+                                    pod_axis=spec.pod_axis)
+    if estimator.learns:
+        def combine(knowledge, rel, step):
+            del step
+            topo = _edge_effective(topology, rel)
+            return pod_combine(knowledge, topo.relevance)
+    else:
+        def combine(knowledge, rel, step):
+            del rel, step
+            return pod_combine(knowledge)
+    return combine
+
+
+@COMBINERS.register("store")
+def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
+                        mesh=None, use_wavg_kernel=False) -> Combiner:
+    """Buffer-trainer eq. 4 weighted average over the (n,) vmapped
+    knowledge stores; relevance already rode in on each piece's R
+    metadata at delivery time, so ``rel`` is unused here."""
+    del spec, schedule, estimator, dense_R, mesh
+    from repro.core import knowledge as K
+
+    def combine(stores, rel, step):
+        del rel, step
+        return jax.vmap(
+            lambda st: K.weighted_average(st, use_wavg_kernel))(stores)
+
+    return combine

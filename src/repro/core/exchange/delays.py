@@ -1,0 +1,85 @@
+"""Delay models — *how stale is knowledge on arrival*.
+
+A :class:`DelayModel` attaches per-edge delivery delays onto the
+schedule's topology at build time (delays are placement facts, static
+at trace time). Three strategies are registered:
+
+``none``
+    Same-epoch queue delivery (the paper's setup): every edge delay 0;
+    ``GroupSpec.max_delay`` still sizes the delay line so explicit
+    per-edge ``delay=`` overrides passed to the trainers fit.
+``uniform``
+    Every edge delayed by ``GroupSpec.max_delay`` epochs — the
+    simplest asynchrony simulation, and the only non-trivial model a
+    resampling schedule can carry (a scalar survives a table swap).
+``hops``
+    Graph-distance staleness (:func:`repro.core.topology.
+    delay_from_hops`): an edge from a distance-d source delivers
+    d·latency epochs late, latency = ``max(GroupSpec.max_delay, 1)``.
+    Static schedules only — hop counts are properties of a fixed
+    graph.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.exchange.registry import DELAYS
+from repro.core.topology import Topology, delay_from_hops
+
+
+class DelayModel:
+    """Interface: per-edge delay attachment.
+
+    attach(topo)
+        The topology with this model's delays on its edge table
+        (static schedules).
+    dense_scalar()
+        The uniform delay (or ``None``) a resampling schedule carries
+        across table swaps; models without one raise there instead of
+        silently dropping delays.
+    """
+
+    def attach(self, topo: Topology) -> Topology:
+        raise NotImplementedError
+
+    def dense_scalar(self) -> Optional[int]:
+        raise NotImplementedError
+
+
+@DELAYS.register("none")
+class NoDelay(DelayModel):
+    def attach(self, topo: Topology) -> Topology:
+        return topo
+
+    def dense_scalar(self) -> Optional[int]:
+        return None
+
+
+@DELAYS.register("uniform", params={"max_delay": ("max_delay", int)})
+class UniformDelay(DelayModel):
+    def __init__(self, delay: int):
+        if delay < 0:
+            raise ValueError(f"uniform delay must be >= 0, got {delay}")
+        self.delay = int(delay)
+
+    def attach(self, topo: Topology) -> Topology:
+        return topo.with_delay(self.delay)
+
+    def dense_scalar(self) -> int:
+        return self.delay
+
+
+@DELAYS.register("hops")
+class HopDelay(DelayModel):
+    def __init__(self, latency: int, graph: Optional[Topology] = None):
+        self.latency = max(int(latency), 1)
+        self.graph = graph
+
+    def attach(self, topo: Topology) -> Topology:
+        return delay_from_hops(topo, self.latency, graph=self.graph)
+
+    def dense_scalar(self) -> Optional[int]:
+        raise ValueError(
+            "the 'hops' delay model measures distances on a fixed "
+            "graph and cannot follow a resampling schedule — use "
+            "delay='uniform' (or 'none') with dynamic/relevance_topk")

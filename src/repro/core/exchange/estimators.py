@@ -1,0 +1,254 @@
+"""Relevance estimators — *how much is src's knowledge worth to dst*.
+
+A :class:`RelevanceEstimator` owns the learned per-edge relevance
+state the trainers carry (``GroupState.relevance`` in the buffer loop,
+``Knowledge.rel`` in the streaming loop) and the observation rule that
+updates it. Four strategies are registered:
+
+``uniform``
+    The paper §6 prior: R ≡ 1, nothing learned, ``observe`` is the
+    identity — the bitwise fixed point every equivalence oracle pins.
+``grad_cos``
+    Exact pairwise gradient-cosine relevance
+    (:func:`repro.core.relevance.grad_cosine`), EMA-smoothed over
+    share steps — O(n²·|params|) comparisons, peak intermediate one
+    leaf.
+``grad_cos+sketch``
+    The same estimator at LLM scale: gradients stream through the
+    seeded ±1 projection (``repro.kernels.grad_sketch``) into (n, d)
+    sketches and cosines are taken on sketches — O(n·|params|)
+    streaming + O(n²·d) comparisons. The streaming trainer carries
+    the window sketch (``Knowledge.sk``) and passes it to ``observe``
+    so nothing parameter-sized is re-read at share time.
+``obs_stats``
+    Observation-statistics relevance (ROADMAP plumbing): running
+    per-agent obs mean/variance — streamed from
+    :func:`repro.rl.rollout.obs_moments` through the trainer's
+    metrics — feed :func:`repro.core.relevance.obs_overlap`, so the
+    static prior refreshes itself from the agents' actual input
+    streams instead of being supplied by hand.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import relevance as REL
+from repro.core.exchange.registry import ESTIMATORS
+
+
+class RelevanceEstimator:
+    """Interface: learned relevance state + its observation rule.
+
+    learns
+        False only for ``uniform`` — lets trainers keep the learned
+        factor out of jitted programs entirely (the bitwise static
+        path).
+    sketch_dim
+        Nonzero only for sketched estimators: the streaming trainer
+        carries an (n, d) window sketch and calls ``sketch_step`` on
+        every accumulation step.
+    init(n)
+        Fresh estimator state (the uniform prior).
+    observe(state, *, grads, sketch, aux, rnd, enabled)
+        One online update. ``grads`` is a stacked gradient pytree
+        (leading (n,) axis), ``sketch`` an already-accumulated (n, d)
+        window sketch (preferred over re-sketching ``grads`` when
+        given), ``aux`` trainer-specific side data (obs moments),
+        ``rnd`` the share-round index seeding per-round projections,
+        ``enabled`` a (traced) bool holding the state during warm-up.
+    matrix(state)
+        The dense (n, n) ``R[src, dst]`` the weighting consumes.
+    """
+
+    learns: bool = True
+    sketch_dim: int = 0
+    #: True when ``observe`` consumes ``aux`` (obs moments) — trainers
+    #: only thread the side channel for estimators that want it.
+    wants_obs: bool = False
+
+    def init(self, n: int) -> Any:
+        raise NotImplementedError
+
+    def observe(self, state, *, grads=None, sketch=None, aux=None,
+                rnd=0, enabled=True):
+        raise NotImplementedError
+
+    def matrix(self, state) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def sketch_step(self, grads, rnd) -> Optional[jnp.ndarray]:
+        """This step's (n, d) sketch contribution (sketched modes
+        only) — linear in ``grads``, so window sums of sketches equal
+        sketches of window sums."""
+        del grads, rnd
+        return None
+
+
+@ESTIMATORS.register("uniform")
+class UniformEstimator(RelevanceEstimator):
+    """R ≡ 1 (paper §6). ``observe`` returns the state untouched, so
+    jitted programs containing it are op-for-op the static path."""
+
+    learns = False
+
+    def init(self, n: int) -> jnp.ndarray:
+        return REL.init_relevance(n)
+
+    def observe(self, state, **kw):
+        return state
+
+    def matrix(self, state) -> jnp.ndarray:
+        return state
+
+
+@ESTIMATORS.register("grad_cos",
+                     params={"relevance_ema": ("relevance_ema", float)})
+class GradCosEstimator(RelevanceEstimator):
+    """Exact pairwise gradient cosines → ``to_relevance`` → EMA."""
+
+    def __init__(self, ema: float):
+        self.ema = ema
+
+    def init(self, n: int) -> jnp.ndarray:
+        return REL.init_relevance(n)
+
+    def observe(self, state, *, grads=None, sketch=None, aux=None,
+                rnd=0, enabled=True):
+        del sketch, aux, rnd
+        cos = REL.grad_cosine(grads)
+        return REL.ema_update(state, REL.to_relevance(cos), self.ema,
+                              enabled)
+
+    def matrix(self, state) -> jnp.ndarray:
+        return state
+
+
+@ESTIMATORS.register("grad_cos+sketch",
+                     params={"relevance_sketch_dim":
+                             ("relevance_sketch_dim", int)})
+class SketchedGradCosEstimator(RelevanceEstimator):
+    """Gradient cosines on seeded sign-JL sketches. With an
+    already-carried window ``sketch`` the observation is just
+    ``cosine_rows(sketch)``; otherwise ``grads`` are streamed through
+    the round's projection first (the buffer trainer's per-epoch
+    path, re-seeded by ``rnd`` so replay is bit-deterministic)."""
+
+    def __init__(self, ema: float, dim: int, seed: int):
+        if dim <= 0:
+            raise ValueError(
+                f"grad_cos+sketch needs relevance_sketch_dim > 0, "
+                f"got {dim}")
+        self.ema = ema
+        self.dim = dim
+        self.seed = seed
+        self.sketch_dim = dim
+
+    def init(self, n: int) -> jnp.ndarray:
+        return REL.init_relevance(n)
+
+    def observe(self, state, *, grads=None, sketch=None, aux=None,
+                rnd=0, enabled=True):
+        del aux
+        if sketch is not None:
+            cos = REL.cosine_rows(sketch)
+        else:
+            cos = REL.sketch_cosine(grads, self.dim,
+                                    REL.fold_seed(self.seed, rnd))
+        return REL.ema_update(state, REL.to_relevance(cos), self.ema,
+                              enabled)
+
+    def matrix(self, state) -> jnp.ndarray:
+        return state
+
+    def sketch_step(self, grads, rnd) -> jnp.ndarray:
+        from repro.kernels.grad_sketch import ops as sketch_ops
+        return sketch_ops.sketch_pytree(
+            grads, REL.fold_seed(self.seed, rnd), self.dim)
+
+
+class ObsStatsState(NamedTuple):
+    """Running per-agent observation moments + the derived relevance.
+
+    count: (n,)    — observations accumulated so far.
+    mean:  (n, d)  — running mean observation.
+    m2:    (n,)    — running sum of squared deviations (isotropic),
+                     so scale = sqrt(m2 / (count·d)).
+    rel:   (n, n)  — EMA of the Gaussian-overlap relevance.
+    """
+    count: jnp.ndarray
+    mean: jnp.ndarray
+    m2: jnp.ndarray
+    rel: jnp.ndarray
+
+
+@ESTIMATORS.register("obs_stats")
+class ObsStatsEstimator(RelevanceEstimator):
+    """Relevance from observation-distribution overlap.
+
+    ``aux`` is the per-agent episode moment triple
+    ``(obs_sum (n, d), sq_sum (n,), count (n,))`` produced by
+    :func:`repro.rl.rollout.obs_moments` and forwarded by the trainer
+    from the agent callbacks' metrics. Moments merge by Chan's
+    parallel-update rule; the relevance observation is
+    :func:`repro.core.relevance.obs_overlap` of the running mean and
+    scale, EMA-smoothed like every other estimator. With no ``aux``
+    the state holds — the estimator degrades to the uniform prior
+    instead of failing, so it composes with observation-free rigs.
+    """
+
+    wants_obs = True
+
+    def __init__(self, ema: float, obs_dim: Optional[int]):
+        if obs_dim is None:
+            raise ValueError(
+                "obs_stats needs the observation dimension: pass "
+                "obs_dim= to build_exchange (the rl group entry "
+                "points forward env.obs_dim automatically)")
+        self.ema = ema
+        self.obs_dim = int(obs_dim)
+
+    def init(self, n: int) -> ObsStatsState:
+        return ObsStatsState(
+            count=jnp.zeros((n,), jnp.float32),
+            mean=jnp.zeros((n, self.obs_dim), jnp.float32),
+            m2=jnp.zeros((n,), jnp.float32),
+            rel=REL.init_relevance(n))
+
+    def observe(self, state: ObsStatsState, *, grads=None, sketch=None,
+                aux=None, rnd=0, enabled=True) -> ObsStatsState:
+        del grads, sketch, rnd
+        if aux is None:
+            return state
+        obs_sum, sq_sum, cnt = aux
+        obs_sum = jnp.asarray(obs_sum, jnp.float32)
+        cnt = jnp.asarray(cnt, jnp.float32)
+        safe = jnp.maximum(cnt, 1.0)
+        batch_mean = obs_sum / safe[:, None]                # (n, d)
+        # batch M2 around the batch mean (isotropic, summed over dims)
+        batch_m2 = (jnp.asarray(sq_sum, jnp.float32)
+                    - jnp.sum(batch_mean * obs_sum, axis=1))
+        tot = state.count + cnt
+        tot_safe = jnp.maximum(tot, 1.0)
+        delta = batch_mean - state.mean                     # (n, d)
+        mean = state.mean + delta * (cnt / tot_safe)[:, None]
+        m2 = (state.m2 + batch_m2
+              + jnp.sum(delta * delta, axis=1)
+              * state.count * cnt / tot_safe)
+        scale = jnp.sqrt(jnp.maximum(m2, 0.0)
+                         / (tot_safe * self.obs_dim))
+        obs = REL.obs_overlap(mean, scale)
+        have = tot > 0
+        rel = REL.ema_update(state.rel, obs, self.ema,
+                             jnp.asarray(enabled) & jnp.any(have))
+        new = ObsStatsState(count=tot, mean=mean, m2=m2, rel=rel)
+        # a zero-count batch (all agents) holds everything
+        any_obs = jnp.any(cnt > 0)
+        return ObsStatsState(
+            *(jnp.where(
+                jnp.reshape(any_obs, (1,) * x.ndim), x, old)
+              for x, old in zip(new, state)))
+
+    def matrix(self, state: ObsStatsState) -> jnp.ndarray:
+        return state.rel

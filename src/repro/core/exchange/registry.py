@@ -1,0 +1,113 @@
+"""String-keyed strategy registries for the exchange-protocol API.
+
+Every strategy family (topology schedules, relevance estimators, delay
+models, combiners) is a :class:`Registry`: a name → factory table with
+per-strategy CLI parameter metadata. ``build_exchange`` (in
+``repro.core.exchange.build``) resolves a ``GroupSpec`` against these
+tables; ``repro.launch.train`` derives its ``--exchange key=value``
+vocabulary from the same metadata, so registering a new strategy never
+requires new argparse plumbing.
+
+Unknown keys fail with the full list of valid choices — the registry
+is the single place that knows what exists, so the error message can
+always name the alternatives.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+
+class Registry:
+    """Name → factory table for one strategy family.
+
+    ``params`` metadata attached at registration maps a CLI parameter
+    name to the ``GroupSpec`` field it sets (plus its type), which is
+    what lets ``--exchange key=value`` cover new strategies for free.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._table: Dict[str, Callable] = {}
+        self._params: Dict[str, Mapping[str, Tuple[str, type]]] = {}
+
+    # ------------------------------------------------------------------
+    def register(self, name: str,
+                 params: Optional[Mapping[str, Tuple[str, type]]] = None):
+        """Decorator: ``@REGISTRY.register("name", params={cli_key:
+        (spec_field, type)})``."""
+        def deco(factory):
+            if name in self._table:
+                raise ValueError(
+                    f"duplicate {self.kind} strategy {name!r}")
+            self._table[name] = factory
+            self._params[name] = dict(params or {})
+            return factory
+        return deco
+
+    # ------------------------------------------------------------------
+    @property
+    def choices(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._table))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._table
+
+    def get(self, name: str) -> Callable:
+        """The factory registered under ``name``; unknown keys raise a
+        ``ValueError`` that names every valid choice."""
+        try:
+            return self._table[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} strategy {name!r}; expected one "
+                f"of {self.choices}") from None
+
+    def build(self, name: str, *args: Any, **kw: Any):
+        return self.get(name)(*args, **kw)
+
+    def cli_params(self) -> Dict[str, Tuple[str, type]]:
+        """Union of every registered strategy's CLI parameters."""
+        out: Dict[str, Tuple[str, type]] = {}
+        for p in self._params.values():
+            out.update(p)
+        return out
+
+
+SCHEDULES = Registry("topology schedule")
+ESTIMATORS = Registry("relevance estimator")
+DELAYS = Registry("delay model")
+COMBINERS = Registry("combiner")
+
+REGISTRIES: Dict[str, Registry] = {
+    "schedule": SCHEDULES,
+    "estimator": ESTIMATORS,
+    "delay": DELAYS,
+    "combiner": COMBINERS,
+}
+
+
+def validate_choice(family: str, name: str) -> None:
+    """Construction-time GroupSpec validation hook: ``"auto"`` or a
+    registered key; anything else raises naming the valid choices."""
+    if name == "auto":
+        return
+    reg = REGISTRIES[family]
+    if name not in reg:
+        raise ValueError(
+            f"unknown {reg.kind} strategy {name!r}; expected 'auto' or "
+            f"one of {reg.choices}")
+
+
+def cli_options() -> Dict[str, Tuple[str, type]]:
+    """The full ``--exchange key=value`` vocabulary: the four strategy
+    selectors plus every registered strategy's declared parameters,
+    each mapped to the ``GroupSpec`` field it sets."""
+    opts: Dict[str, Tuple[str, type]] = {
+        "schedule": ("exchange_schedule", str),
+        "estimator": ("exchange_estimator", str),
+        "delay": ("exchange_delay", str),
+        "combiner": ("exchange_combiner", str),
+    }
+    for reg in REGISTRIES.values():
+        opts.update(reg.cli_params())
+    return opts

@@ -1,0 +1,291 @@
+"""Topology schedules — *which graph is in force at step t*.
+
+A :class:`TopologySchedule` owns the communication graph's evolution
+and nothing else: the trainers carry a small (n, k) gossip table and
+ask the schedule to refresh it (carried-table loops, ``DDAL``) or to
+materialise the step's :class:`~repro.core.topology.Topology` from
+scratch (stateless share steps, the streaming trainer). Three
+strategies are registered:
+
+``static``
+    The graph never changes. ``materialize``/``at_step`` return the
+    *exact* wrapped ``Topology`` object, so the static limit of every
+    downstream consumer is structural, not just numerical.
+``dynamic``
+    Time-varying uniform gossip
+    (:class:`~repro.core.topology.DynamicTopology`): the ``random_k``
+    table resamples every ``resample_every`` epochs, seeded by
+    ``(topology_seed, epoch // resample_every)``.
+``relevance_topk``
+    Relevance-*aware* resampling (ROADMAP): edge choice is a Gumbel
+    top-k over the learned relevance estimate — the gossip graph
+    itself adapts, not just the eq. 4 weights — with per-destination
+    ε-greedy exploration rows falling back to uniform gossip so no
+    edge starves. Fully deterministic in ``(seed, epoch)``: sampling
+    keys fold the resample-round index exactly like ``dynamic``, so
+    replay reproduces the graph sequence bit for bit.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import (
+    DynamicTopology,
+    Topology,
+    sample_gossip,
+)
+from repro.core.exchange.registry import SCHEDULES
+
+
+class TopologySchedule:
+    """Interface: the communication graph over time.
+
+    base
+        Static-shape ``Topology`` — fixes (n, k) for delay-line
+        allocation and the delivery fast-path hints; annotations (per
+        -edge delay / static relevance prior) live here.
+    topology
+        The wrapped graph object (``Topology`` or ``DynamicTopology``)
+        — kept for callers that introspect the schedule (benchmarks,
+        ``DDAL.topology`` back-compat).
+    init_table()
+        The (n, k) int32 gossip table a carried-table loop starts
+        from.
+    refresh(step, nbr, rel)
+        The carried table after ``step``: resampling schedules swap it
+        at round boundaries (under a ``lax.cond`` over the tiny
+        table), static ones return it untouched. ``rel`` is the dense
+        (n, n) learned relevance (consumed only by relevance-aware
+        schedules).
+    materialize(step, nbr, rel)
+        The ``Topology`` in force given the carried table.
+    at_step(step, rel)
+        Stateless form — recompute the step's table from scratch. For
+        relevance-free schedules this equals the refresh sequence
+        when steps are visited in order from 0; a relevance-aware
+        schedule re-ranks with the ``rel`` in force at the call (its
+        random draws are still frozen per resample round — see
+        ``RelevanceTopKSchedule``), so mid-round calls track the
+        evolving estimate where the carried-table form freezes the
+        boundary's picks. The streaming trainer uses this at share
+        steps.
+    """
+
+    base: Topology
+    topology: Union[Topology, DynamicTopology]
+    #: True when refresh / at_step consume the learned relevance —
+    #: trainers may skip materialising the dense matrix otherwise.
+    uses_relevance: bool = False
+
+    def init_table(self) -> jnp.ndarray:
+        return jnp.asarray(self.base.nbr, jnp.int32)
+
+    def refresh(self, step, nbr, rel):
+        raise NotImplementedError
+
+    def materialize(self, step, nbr, rel) -> Topology:
+        raise NotImplementedError
+
+    def at_step(self, step, rel) -> Topology:
+        raise NotImplementedError
+
+    @property
+    def max_delay(self) -> int:
+        return self.topology.max_delay
+
+
+@SCHEDULES.register("static",
+                    params={"topology": ("topology", str),
+                            "degree": ("degree", int),
+                            "topology_seed": ("topology_seed", int)})
+class StaticSchedule(TopologySchedule):
+    """The graph named by ``GroupSpec.topology``, fixed for the run."""
+
+    def __init__(self, topo: Topology):
+        self.base = topo
+        self.topology = topo
+
+    def refresh(self, step, nbr, rel):
+        del step, rel
+        return nbr
+
+    def materialize(self, step, nbr, rel) -> Topology:
+        del step, nbr, rel
+        return self.base
+
+    def at_step(self, step, rel) -> Topology:
+        del step, rel
+        return self.base
+
+
+@SCHEDULES.register("dynamic",
+                    params={"resample_every": ("resample_every", int)})
+class DynamicSchedule(TopologySchedule):
+    """Uniform gossip resampling (``DynamicTopology``); with
+    ``resample_every <= 0`` it degenerates to the static base —
+    returning the exact base object, the pinned static-limit oracle."""
+
+    def __init__(self, dyn: DynamicTopology):
+        self.topology = dyn
+        self.base = dyn.base
+        self._resampling = dyn.resample_every > 0
+
+    def refresh(self, step, nbr, rel):
+        del rel
+        if not self._resampling:
+            return nbr
+        return self.topology.refresh_table(step, nbr)
+
+    def materialize(self, step, nbr, rel) -> Topology:
+        del step, rel
+        if not self._resampling:
+            return self.base
+        return self.topology.with_table(nbr)
+
+    def at_step(self, step, rel) -> Topology:
+        del rel
+        return self.topology.at_epoch(step)
+
+
+@SCHEDULES.register("relevance_topk",
+                    params={"explore_eps": ("explore_eps", float)})
+class RelevanceTopKSchedule(TopologySchedule):
+    """Gumbel top-k gossip over the learned relevance.
+
+    Every ``resample_every`` epochs each destination redraws its k−1
+    in-edges (slot 0 stays the self-loop) by perturbed-score sampling:
+
+        score[dst, src] = log R[src, dst] + Gumbel(key, dst, src)
+
+    and keeps the top k−1 sources — a without-replacement sample whose
+    inclusion probabilities follow the relevance weights (Gumbel
+    top-k). Exploration: per round, each destination independently
+    flips an ε-coin; exploring rows take a fresh *uniform* gossip row
+    instead, so low-R edges keep being probed and the estimate can
+    recover (the EMA only updates edges that get observed gradients
+    under sparse exchange).
+
+    Determinism: all three draws (Gumbel, ε-coins, uniform fallback)
+    key off ``fold_in(PRNGKey(seed), step // resample_every)`` — the
+    schedule is a pure function of ``(seed, epoch, R)``, so replay
+    with the same seed and data reproduces the graph sequence exactly.
+
+    The two trainer forms differ only in *which R ranks a round*: the
+    carried-table loop (``refresh``, the buffer trainer) samples once
+    at the round boundary and freezes the picks; the stateless form
+    (``at_step``, the streaming trainer's share steps) reuses the
+    round's frozen draws but ranks with the R in force at the call,
+    so within a round the graph moves only if the learned estimate
+    itself moves. Both are replay-deterministic.
+    """
+
+    uses_relevance = True
+
+    def __init__(self, base: Topology, resample_every: int, seed: int,
+                 eps: float, dense_delay=None, dense_relevance=None):
+        if resample_every < 1:
+            raise ValueError(
+                f"relevance_topk resamples on a cadence and needs "
+                f"resample_every >= 1, got {resample_every}")
+        if not 0.0 <= eps <= 1.0:
+            raise ValueError(
+                f"explore_eps must be in [0, 1], got {eps}")
+        if not np.asarray(base.mask).all():
+            raise ValueError(
+                "relevance_topk resamples a k-regular table and "
+                "cannot carry a padded edge mask — give it a "
+                "regular-degree base (e.g. random_k)")
+        if (dense_relevance is None
+                and (np.asarray(base.relevance)
+                     != np.asarray(base.mask, np.float32)).any()):
+            raise ValueError(
+                "the base topology's per-edge relevance prior cannot "
+                "follow relevance_topk's table swaps — pass the prior "
+                "as a dense (n, n) relevance= matrix instead")
+        self.base = base
+        # the DynamicTopology supplies table→Topology materialisation
+        # (all-True mask, dense or uniform-base delay, dense or unit
+        # relevance prior)
+        self.topology = DynamicTopology(base=base,
+                                        resample_every=resample_every,
+                                        seed=seed,
+                                        dense_delay=dense_delay,
+                                        dense_relevance=dense_relevance)
+        if dense_delay is None:
+            self.topology._uniform_base_delay()  # validate early
+        self.resample_every = resample_every
+        self.seed = seed
+        self.eps = eps
+
+    # ------------------------------------------------------------------
+    def with_dense(self, delay=None,
+                   relevance=None) -> "RelevanceTopKSchedule":
+        """Attach dense (resample-surviving) delay / relevance carries
+        — the only annotation forms a resampling schedule can honor
+        (``DynamicTopology.with_dense`` semantics). Mutates this
+        schedule's wrapped topology and base in lockstep."""
+        if delay is not None or relevance is not None:
+            self.topology = self.topology.with_dense(
+                delay=delay, relevance=relevance)
+            self.base = self.topology.base
+        return self
+
+    # ------------------------------------------------------------------
+    def _round_keys(self, step):
+        rnd = jnp.asarray(step, jnp.int32) // self.resample_every
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
+        return jax.random.split(key, 3)
+
+    def explore_mask(self, step) -> jnp.ndarray:
+        """(n,) bool — which destinations explore this round. Exposed
+        so the pinned exploration-rate property test can check the
+        realised rate against ε without reverse-engineering tables."""
+        n = self.base.n_agents
+        _, ke, _ = self._round_keys(step)
+        return jax.random.bernoulli(ke, self.eps, (n,))
+
+    def sample_table(self, step, rel) -> jnp.ndarray:
+        """The (n, k) table of ``step``'s resample round — a pure
+        (traceable) function of ``(seed, step // resample_every, R)``.
+        ``rel=None`` (a non-learning estimator) degenerates to
+        uniform-weight Gumbel sampling — every edge equally likely,
+        like ``dynamic``, but through the same code path."""
+        n, k = self.base.nbr.shape
+        kg, ke, ku = self._round_keys(step)
+        if rel is None:
+            rel = jnp.ones((n, n), jnp.float32)
+        R = jnp.maximum(jnp.asarray(rel, jnp.float32), 1e-30)
+        u = jax.random.uniform(kg, (n, n), minval=1e-12, maxval=1.0)
+        gumbel = -jnp.log(-jnp.log(u))
+        # scores[dst, src]; the self column is forced out — slot 0 is
+        # the dedicated self-loop, like sample_gossip's layout
+        scores = jnp.log(R.T) + gumbel
+        scores = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf, scores)
+        _, picked = jax.lax.top_k(scores, k - 1)           # (n, k-1)
+        self_col = jnp.arange(n, dtype=jnp.int32)[:, None]
+        greedy = jnp.concatenate(
+            [self_col, picked.astype(jnp.int32)], axis=1)
+        uniform = sample_gossip(ku, n, k)
+        explore = jax.random.bernoulli(ke, self.eps, (n,))
+        return jnp.where(explore[:, None], uniform, greedy)
+
+    # ------------------------------------------------------------------
+    def refresh(self, step, nbr, rel):
+        boundary = (jnp.asarray(step, jnp.int32)
+                    % self.resample_every) == 0
+        return jax.lax.cond(
+            boundary,
+            lambda _: self.sample_table(step, rel),
+            lambda _: jnp.asarray(nbr, jnp.int32),
+            None)
+
+    def materialize(self, step, nbr, rel) -> Topology:
+        del step, rel
+        return self.topology.with_table(nbr)
+
+    def at_step(self, step, rel) -> Topology:
+        return self.topology.with_table(self.sample_table(step, rel))

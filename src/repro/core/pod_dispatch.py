@@ -34,6 +34,12 @@ parameter-sized accumulators the exact Gram would contract
 no-parameter-sized-intermediate property itself is gated there by
 the jaxpr peak-intermediate check).
 
+Trainers reach this module through the exchange protocol's ``pod``
+combiner strategy (``repro.core.exchange.combiners`` — selected by
+``GroupSpec.pods > 0`` or ``exchange_combiner="pod"``), never
+directly: ``make_pod_dispatch`` builds the combine closure once at
+protocol-build time.
+
 Equivalence oracle: both paths reuse ``_edge_sums`` /
 ``_finish_combine`` from ``sharded_ddal``, and with one pod the
 cross-pod segment vanishes *statically* — the dispatched combine is

@@ -71,9 +71,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-# Modes GroupSpec.relevance_mode accepts. "obs_overlap" is a static
-# prior (no online signal reaches the trainers), so the online
-# estimators are uniform | grad_cos.
+# Modes the legacy GroupSpec.relevance_mode flag accepts; the
+# exchange API (repro.core.exchange.estimators) maps them onto
+# estimator strategies ("uniform" | "grad_cos" | "grad_cos+sketch")
+# and adds "obs_stats", which turns the static obs_overlap prior into
+# an online estimator fed by repro.rl.rollout.obs_moments.
 RELEVANCE_MODES = ("uniform", "grad_cos")
 
 
@@ -218,7 +220,11 @@ def update_relevance(rel, grads, mode: str, decay: float,
     ``"uniform"``, an EMA toward the current gradient-cosine
     relevance for ``"grad_cos"`` — exact pairwise cosines when
     ``sketch_dim == 0``, the streaming sketched estimate (projection
-    seeded per ``(seed, rnd)``) otherwise."""
+    seeded per ``(seed, rnd)``) otherwise. The trainers now reach
+    these update rules through the exchange estimator strategies
+    (``repro.core.exchange.estimators``), which trace the same ops;
+    this flag-dispatch form is kept as the algebraic reference the
+    estimator tests pin against."""
     if mode == "uniform":
         return rel
     if mode == "grad_cos":

@@ -48,6 +48,15 @@ share window), EMA-smoothed across share steps in ``Knowledge.rel``
 (``repro.core.relevance``). Both default off; the static path is
 untouched.
 
+Exchange protocol (ISSUE 5): the train step no longer interprets any
+of those flags itself — ``repro.core.exchange.build_exchange``
+resolves them into strategy objects once, and the jitted step calls
+``protocol.sketch_step`` (window accumulation), ``protocol.observe``
+(the relevance update) and ``protocol.combine`` (flat segment-sum,
+global fast path, or pod dispatch — decided at build time). The
+``"auto"`` strategies trace exactly the ops the inline ladders used
+to emit, so every pre-redesign configuration is bitwise-reproduced.
+
 Sketched relevance (ISSUE 4): with ``spec.relevance_sketch_dim > 0``
 the window additionally carries an (A, d) **gradient sketch**
 (``Knowledge.sk``): every accumulation step also streams that epoch's
@@ -63,20 +72,14 @@ sketch rows (O(pods·A·d) bytes), never anything parameter-sized
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import tree_map, tree_zeros_like
 from repro.configs.base import ArchConfig, GroupSpec
-from repro.core import relevance as REL
-from repro.core.topology import DynamicTopology, Topology, make_topology
-from repro.core.weighting import (
-    combine_relevance,
-    relevance_matrix,
-    training_experience,
-)
+from repro.core.weighting import training_experience
 from repro.models import get_model
 from repro.optim import Optimizer
 
@@ -86,9 +89,13 @@ class Knowledge(NamedTuple):
     tsum: jnp.ndarray     # (A,)
     rg: Any
     rsum: jnp.ndarray     # (A,)
-    rel: Any = None       # (A, A) learned R EMA; None = uniform mode
-    sk: Any = None        # (A, d) window gradient sketch; None = exact
-                          # relevance path (sketch_dim = 0)
+    rel: Any = None       # relevance-estimator state, persisted across
+                          # window resets (repro.core.exchange): the
+                          # (A, A) learned R EMA for the gradient
+                          # estimators, an ObsStatsState pytree for
+                          # obs_stats; None = uniform (nothing learned)
+    sk: Any = None        # (A, d) window gradient sketch; None unless
+                          # the estimator sketches (grad_cos+sketch)
 
 
 class TrainState(NamedTuple):
@@ -116,21 +123,24 @@ def init_knowledge(params, dtype=jnp.float32, rel=None,
 
 
 def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
-                     key) -> TrainState:
-    """Real initialisation (CPU tests / actual training)."""
+                     key, exchange=None) -> TrainState:
+    """Real initialisation (CPU tests / actual training). The
+    relevance-state seed (``Knowledge.rel``) and the sketch width come
+    from the spec's exchange estimator — pass the prebuilt
+    ``exchange`` protocol if the train step got one, so the carried
+    state matches what its estimator expects."""
+    from repro.core.exchange import build_exchange
+    if exchange is None:
+        exchange = build_exchange(spec, kind="streaming")
     model = get_model(cfg)
     keys = jax.random.split(key, spec.n_agents)
     params = jax.vmap(lambda k: model.init(cfg, k))(keys)
     opt_state = jax.vmap(opt.init)(params)
-    learn_rel = spec.relevance_mode == "grad_cos"
-    rel = REL.init_relevance(spec.n_agents) if learn_rel else None
     return TrainState(params=params, opt_state=opt_state,
                       know=init_knowledge(params,
                                           jnp.dtype(spec.knowledge_dtype),
-                                          rel=rel,
-                                          sketch_dim=(
-                                              spec.relevance_sketch_dim
-                                              if learn_rel else 0)),
+                                          rel=exchange.streaming_rel_init(),
+                                          sketch_dim=exchange.sketch_dim),
                       step=jnp.zeros((), jnp.int32))
 
 
@@ -233,8 +243,9 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                           opt: Optimizer,
                           relevance: Optional[jnp.ndarray] = None,
                           loss_fn: Optional[Callable] = None,
-                          topology: Optional[Topology] = None,
-                          mesh=None):
+                          topology=None,
+                          mesh=None,
+                          exchange=None):
     """Build the jittable DDAL train step.
 
     Returns step(state, batch) -> (state', metrics); ``batch`` leaves
@@ -242,8 +253,11 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
     The model is resolved lazily from ``cfg`` only when no ``loss_fn``
     is supplied, so toy losses need no ArchConfig (pass ``cfg=None``).
 
-    With ``spec.pods > 0`` (hierarchical topology only) the share-step
-    combine runs pod-dispatched (``repro.core.pod_dispatch``): the
+    Exchange decisions live in the ``repro.core.exchange`` protocol
+    (built from ``spec`` unless a prebuilt ``exchange`` is passed):
+    the combiner strategy picks the global-sum fast path, the
+    neighbor-local segment-sum, or — with ``spec.pods > 0`` — the
+    two-level pod dispatch (``repro.core.pod_dispatch``), where the
     intra-pod segment stays local to the fast ``"agent"`` mesh axis
     and only the pod leaders' planes cross the ``spec.pod_axis`` axis.
     Pass the two-level ``mesh`` (``repro.launch.mesh.make_pod_mesh``)
@@ -256,67 +270,24 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
 
         def loss_fn(params, batch):        # noqa: F811
             return model.loss(cfg, params, batch)
-    A = spec.n_agents
-    learn_rel = spec.relevance_mode == "grad_cos"
-    sketch_dim = spec.relevance_sketch_dim if learn_rel else 0
-    # full + uniform keeps the global-sum fast path; any named sparse
-    # topology (or an explicit Topology) takes the segment-sum path.
-    if topology is None and (spec.topology != "full"
-                             or spec.resample_every > 0):
-        topology = make_topology(spec)
-    if isinstance(topology, DynamicTopology):
-        if relevance is not None:
-            topology = topology.with_dense(relevance=relevance)
-    elif topology is not None and relevance is not None:
-        topology = topology.with_relevance(relevance)
-    uniform = (topology is None and relevance is None
-               and spec.r_weighting == "uniform" and not learn_rel)
-    R = (relevance if relevance is not None
-         else relevance_matrix(A, "uniform"))
-
-    pod_combine = None
-    if spec.pods > 0:
-        from repro.core.pod_dispatch import make_pod_dispatch
-        from repro.core.topology import hierarchical_layout
-        if not isinstance(topology, Topology):
-            raise ValueError(
-                "spec.pods > 0 needs a static hierarchical Topology "
-                f"(got {type(topology).__name__})")
-        layout = hierarchical_layout(A, spec.degree)
-        pod_combine = make_pod_dispatch(
-            topology, layout, mesh=mesh, pod_axis=spec.pod_axis)
-
-    def topo_at(step) -> Topology:
-        if isinstance(topology, DynamicTopology):
-            return topology.at_epoch(step)
-        return topology
-
-    if pod_combine is not None:
-        def combine(k2, rel, step):
-            del step
-            if learn_rel:
-                eff = combine_relevance(
-                    topology.relevance,
-                    REL.gather_edges(rel, topology.nbr))
-                return pod_combine(
-                    k2, jnp.where(topology.mask, eff, 0.0))
-            return pod_combine(k2)
-    elif topology is not None:
-        def combine(k2, rel, step):
-            topo = topo_at(step)
-            if learn_rel:
-                eff = combine_relevance(
-                    topo.relevance, REL.gather_edges(rel, topo.nbr))
-                topo = topo._replace(
-                    relevance=jnp.where(topo.mask, eff, 0.0))
-            return _combine_topo(k2, topo)
-    else:
-        def combine(k2, rel, step):
-            del step
-            if learn_rel:
-                return _combine(k2, combine_relevance(R, rel),
-                                uniform=False)
-            return _combine(k2, R, uniform)
+    if exchange is None:
+        from repro.core.exchange import build_exchange
+        exchange = build_exchange(spec, mesh, kind="streaming",
+                                  topology=topology,
+                                  relevance=relevance)
+    elif exchange.kind != "streaming":
+        raise ValueError(
+            f"the streaming train step needs a 'streaming' exchange "
+            f"protocol, got {exchange.kind!r}")
+    elif (topology is not None or relevance is not None
+          or mesh is not None):
+        raise ValueError(
+            "topology/relevance/mesh would be silently ignored: they "
+            "are baked into the protocol at build time — pass them to "
+            "build_exchange(...) instead when supplying a prebuilt "
+            "exchange")
+    learn_rel = exchange.learns
+    sketch_dim = exchange.sketch_dim
 
     vopt = jax.vmap(opt.update, in_axes=(0, 0, 0, None))
 
@@ -350,30 +321,23 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                 # ending at share step t folds the same round index
                 # ((step + mb − 1) // mb), so at share time sk IS the
                 # sketch of rg — nothing parameter-sized is re-read.
-                from repro.kernels.grad_sketch import ops as sketch_ops
-                seed_r = REL.fold_seed(
-                    spec.topology_seed,
-                    (step + spec.minibatch - 1) // spec.minibatch)
-                sk = know.sk + sketch_ops.sketch_pytree(
-                    grads, seed_r, sketch_dim)
+                rnd = (step + spec.minibatch - 1) // spec.minibatch
+                sk = know.sk + exchange.sketch_step(grads, rnd)
             k2 = Knowledge(tg=tg, tsum=know.tsum + T_t,
                            rg=rg, rsum=know.rsum + 1.0, rel=know.rel,
                            sk=sk)
 
             def do_share(_):
-                rel = k2.rel
-                if learn_rel:
-                    # window-accumulated grads are already a temporal
-                    # average over the share window — their cosine is
-                    # the per-window relevance observation. Sketched
-                    # mode reads it off the carried (A, d) sketch:
-                    # O(A²·d), and only sketch rows (never parameter
-                    # planes) cross the mesh for relevance.
-                    obs = (REL.cosine_rows(k2.sk) if sketch_dim > 0
-                           else REL.grad_cosine(k2.rg))
-                    rel = REL.ema_update(rel, REL.to_relevance(obs),
-                                         spec.relevance_ema)
-                gbar = combine(k2, rel, step)
+                # window-accumulated grads are already a temporal
+                # average over the share window — the estimator
+                # observes them (or the carried (A, d) sketch, so only
+                # sketch rows — never parameter planes — cross the
+                # mesh for relevance), then the combiner strategy runs
+                # eq. 4.
+                rel = exchange.observe(
+                    k2.rel, grads=k2.rg, sketch=k2.sk,
+                    rnd=(step + spec.minibatch - 1) // spec.minibatch)
+                gbar = exchange.combine(k2, rel, step)
                 p2, o2 = vopt(gbar, state.opt_state, state.params, step)
                 return p2, o2, init_knowledge(state.params, kdt,
                                               rel=rel,

@@ -49,10 +49,13 @@ def combine_relevance(prior, learned):
     """Effective relevance = static prior × learned online estimate,
     elementwise. The prior encodes what is wired (topology support,
     user-supplied R, e.g. ``repro.core.relevance.obs_overlap``); the
-    learned factor (``repro.core.relevance``) adapts it. A learned
-    factor of 1 — the ``relevance_mode="uniform"`` fixed point —
-    leaves the static eq. 4 weights exactly unchanged, which is the
-    equivalence oracle the tests pin."""
+    learned factor comes from the exchange protocol's relevance
+    estimator (``repro.core.exchange.estimators``, dense matrix via
+    ``estimator.matrix(state)``) and adapts it. With the ``uniform``
+    estimator the protocol skips this product entirely
+    (``ExchangeProtocol.apply_relevance`` is the identity), so the
+    static eq. 4 weights are not just numerically but *structurally*
+    unchanged — the equivalence oracle the tests pin."""
     return prior * learned
 
 

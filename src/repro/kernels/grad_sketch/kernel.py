@@ -39,15 +39,11 @@ MIX_CONSTANTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D)
 _P1, _P2, _P3 = MIX_CONSTANTS
 
 
-def sign_block(seed, start, count: int, dim: int) -> jnp.ndarray:
-    """Deterministic ±1 fp32 block ``S[p - start, j]`` for global
-    positions p ∈ [start, start + count) and sketch dims j < dim.
-
-    Pure function of ``(seed, p, j)`` — independent of how callers
-    tile the position axis — built from 2D iotas (TPU-legal) and a
-    xorshift-multiply integer hash. ``seed``/``start`` may be traced
-    scalars; ``count``/``dim`` are static.
-    """
+def _sign_bits(seed, start, count: int, dim: int) -> jnp.ndarray:
+    """The raw sign bits (uint32 ∈ {0, 1}) behind ``sign_block``:
+    hash ``(seed, global position, sketch dim)`` and keep the top bit.
+    Shared by every width the sign stream is materialised at, so all
+    of them agree bit for bit."""
     pos = jax.lax.broadcasted_iota(jnp.int32, (count, dim), 0)
     dimi = jax.lax.broadcasted_iota(jnp.int32, (count, dim), 1)
     s = jnp.asarray(seed).astype(jnp.uint32)
@@ -58,7 +54,34 @@ def sign_block(seed, start, count: int, dim: int) -> jnp.ndarray:
     x = (x ^ (x >> 15)) * jnp.uint32(_P2)
     x = (x ^ (x >> 13)) * jnp.uint32(_P3)
     x = x ^ (x >> 16)
-    return 1.0 - 2.0 * (x >> 31).astype(jnp.float32)
+    return x >> 31
+
+
+def sign_block(seed, start, count: int, dim: int) -> jnp.ndarray:
+    """Deterministic ±1 fp32 block ``S[p - start, j]`` for global
+    positions p ∈ [start, start + count) and sketch dims j < dim.
+
+    Pure function of ``(seed, p, j)`` — independent of how callers
+    tile the position axis — built from 2D iotas (TPU-legal) and a
+    xorshift-multiply integer hash. ``seed``/``start`` may be traced
+    scalars; ``count``/``dim`` are static.
+    """
+    return 1.0 - 2.0 * _sign_bits(seed, start, count, dim).astype(
+        jnp.float32)
+
+
+def sign_block_i8(seed, start, count: int, dim: int) -> jnp.ndarray:
+    """``sign_block`` bit-packed to int8: the same ±1 stream at one
+    byte per sign instead of four (ROADMAP "sign-generation
+    bandwidth"). The off-TPU tiled path materialises one (block, d)
+    sign block per chunk — int8 cuts that block's memory traffic 4×,
+    and the cast back to fp32 fuses into the projection dot (±1 is
+    exact in both dtypes, so the sketch is bitwise unchanged; pinned
+    against the jnp oracle in ``tests/test_exchange.py``). The Pallas
+    kernel keeps fp32: it regenerates signs in VMEM where the MXU
+    wants fp32 operands and no sign block ever reaches HBM."""
+    bits = _sign_bits(seed, start, count, dim)
+    return (jnp.int8(1) - jnp.int8(2) * bits.astype(jnp.int8))
 
 
 def _sketch_kernel(seed_ref, g_ref, o_ref, *, offset, tile, dim,

@@ -30,13 +30,14 @@ from repro.kernels.grad_sketch import ref
 from repro.kernels.grad_sketch.kernel import (
     DEFAULT_ROWS,
     LANES,
-    sign_block,
+    sign_block_i8,
     sketch_flat,
 )
 
 _MIN_KERNEL_SIZE = DEFAULT_ROWS * LANES
-# XLA-path chunk: one (block, d) sign block is the only projection
-# intermediate ever live — 4·block·d bytes (4 MB at d = 256).
+# XLA-path chunk: one (block, d) int8 sign block is the only
+# projection intermediate ever live — block·d bytes (1 MB at
+# d = 256; was 4 MB fp32 before the bit-pack).
 DEFAULT_BLOCK = 4096
 # beyond this many chunks per leaf, roll the walk into a fori_loop —
 # unrolled static slices fuse (and run) better, but jaxpr size must
@@ -58,12 +59,15 @@ def _resolve(impl: str) -> str:
 def _xla_sketch_flat(G: jnp.ndarray, seed, dim: int, offset: int = 0,
                      block: int = DEFAULT_BLOCK) -> jnp.ndarray:
     """Tiled XLA projection: walk ``block``-position chunks of G so
-    only one (block, d) sign block exists at a time. Few-tile leaves
+    only one (block, d) sign block exists at a time — generated as an
+    **int8** ±1 matrix (``sign_block_i8``), 1 B/sign instead of 4,
+    with the fp32 cast fused into the dot; ±1 is exact either way, so
+    the sketch is bitwise the fp32-sign oracle's. Few-tile leaves
     unroll (static slices fuse best); beyond ``_MAX_UNROLL`` tiles
     the loop rolls into a ``fori_loop`` so program size stays O(1)
     however large the leaf (a 4e8-position embedding would otherwise
     unroll ~1e5 dot equations into the jaxpr). The short tail chunk
-    is one static trailing step: ``sign_block`` is positional, so no
+    is one static trailing step: the sign stream is positional, so no
     padding copy of G is ever made."""
     n, p = G.shape
     tiles, tail = divmod(p, block)
@@ -71,8 +75,9 @@ def _xla_sketch_flat(G: jnp.ndarray, seed, dim: int, offset: int = 0,
 
     def chunk(a, start, width):
         g = jax.lax.slice_in_dim(G, start, start + width, axis=1)
-        s = sign_block(seed, offset + start, width, dim)
-        return a + jnp.dot(g.astype(jnp.float32), s,
+        s = sign_block_i8(seed, offset + start, width, dim)
+        return a + jnp.dot(g.astype(jnp.float32),
+                           s.astype(jnp.float32),
                            preferred_element_type=jnp.float32)
 
     if tiles <= _MAX_UNROLL:
@@ -82,8 +87,9 @@ def _xla_sketch_flat(G: jnp.ndarray, seed, dim: int, offset: int = 0,
         def body(i, a):
             g = jax.lax.dynamic_slice_in_dim(G, i * block, block,
                                              axis=1)
-            s = sign_block(seed, offset + i * block, block, dim)
-            return a + jnp.dot(g.astype(jnp.float32), s,
+            s = sign_block_i8(seed, offset + i * block, block, dim)
+            return a + jnp.dot(g.astype(jnp.float32),
+                               s.astype(jnp.float32),
                                preferred_element_type=jnp.float32)
         acc = jax.lax.fori_loop(0, tiles, body, acc)
     if tail:

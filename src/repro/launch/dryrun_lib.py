@@ -111,13 +111,18 @@ def lower_train(cfg: ArchConfig, shape: ShapeConfig, mesh,
     opt = adamw(lr)
     rules = train_rules(mesh)
     agent_axis = rules["agent"]
-    step_fn = make_group_train_step(cfg, spec, opt)
+    # one protocol serves both the step and the partition specs: the
+    # estimator decides what relevance state the TrainState carries,
+    # so explicit exchange_estimator overrides shard correctly too
+    from repro.core.exchange import build_exchange
+    exchange = build_exchange(spec, kind="streaming")
+    step_fn = make_group_train_step(cfg, spec, opt, exchange=exchange)
 
     state_shapes = train_state_specs(cfg, spec, opt)
     state_specs = train_state_partition_specs(
         cfg, rules, agent_axis,
-        learn_relevance=spec.relevance_mode == "grad_cos",
-        sketch_dim=spec.relevance_sketch_dim)
+        learn_relevance=exchange.estimator.learns,
+        sketch_dim=exchange.estimator.sketch_dim)
     batch_shapes = _with_lead(input_specs(cfg, shape), spec.n_agents)
     bspecs = batch_partition_specs(cfg, shape, rules["batch"],
                                    lead=(agent_axis,))

@@ -141,12 +141,14 @@ def train_state_partition_specs(cfg: ArchConfig, rules: dict,
                                 sketch_dim: int = 0) -> Any:
     """Specs for repro.core.sharded_ddal.TrainState with an AdamW
     optimiser (m/v mirror params; count/step are scalars). With
-    ``learn_relevance`` (``GroupSpec.relevance_mode="grad_cos"``) the
-    state carries the (A, A) learned relevance EMA — rows shard over
-    the agent axis like the other per-agent leaves — and with
-    ``sketch_dim > 0`` also the (A, d) window gradient sketch
-    (``Knowledge.sk``), likewise row-sharded: the cosine on it is the
-    only cross-agent relevance contraction, moving O(A·d) bytes."""
+    ``learn_relevance`` (the exchange estimator's ``.learns`` — the
+    gradient-cosine estimators of ``repro.core.exchange``) the state
+    carries the (A, A) learned relevance EMA — rows shard over the
+    agent axis like the other per-agent leaves — and with
+    ``sketch_dim > 0`` (the ``grad_cos+sketch`` estimator) also the
+    (A, d) window gradient sketch (``Knowledge.sk``), likewise
+    row-sharded: the cosine on it is the only cross-agent relevance
+    contraction, moving O(A·d) bytes."""
     from repro.core.sharded_ddal import Knowledge, TrainState
     pspec = param_partition_specs(cfg, rules, lead=(agent_axis,))
     vec = P(agent_axis)

@@ -15,6 +15,36 @@ import argparse
 import time
 
 
+# Legacy named flags are kept as thin shims over the --exchange
+# vocabulary (each still works; new strategies never add flags here —
+# they arrive through the registry automatically).
+_DEPRECATION = " [deprecated spelling of --exchange {key}=N]"
+
+
+def _exchange_kv(text: str):
+    """Parse one ``--exchange key=value`` item against the registry
+    vocabulary (``repro.core.exchange.cli_options``): the key names
+    either a strategy selector (schedule/estimator/delay/combiner) or
+    any registered strategy's declared parameter, and the value is
+    coerced to that parameter's type."""
+    from repro.core.exchange import cli_options
+    opts = cli_options()
+    key, sep, value = text.partition("=")
+    if not sep:
+        raise argparse.ArgumentTypeError(
+            f"--exchange wants key=value, got {text!r}")
+    if key not in opts:
+        raise argparse.ArgumentTypeError(
+            f"unknown exchange option {key!r}; valid keys: "
+            f"{', '.join(sorted(opts))}")
+    field, typ = opts[key]
+    try:
+        return field, typ(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--exchange {key} wants a {typ.__name__}, got {value!r}")
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="llama3.2-3b")
@@ -25,36 +55,60 @@ def main(argv=None):
     p.add_argument("--threshold", type=int, default=5)
     p.add_argument("--minibatch", type=int, default=5)
     p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--exchange", action="append", default=[],
+                   type=_exchange_kv, metavar="KEY=VALUE",
+                   help="exchange-protocol configuration "
+                        "(repro.core.exchange): KEY is a strategy "
+                        "selector (schedule= estimator= delay= "
+                        "combiner=) or any registered strategy's "
+                        "parameter (e.g. resample_every= "
+                        "relevance_ema= explore_eps= pods=). "
+                        "Repeatable; keys and types come from the "
+                        "strategy registry, so newly registered "
+                        "strategies need no new flags. Example: "
+                        "--exchange schedule=relevance_topk "
+                        "--exchange explore_eps=0.2")
     p.add_argument("--topology", default="full",
                    choices=["full", "ring", "torus2d", "star",
-                            "random_k", "hierarchical"])
+                            "random_k", "hierarchical"],
+                   help="communication graph"
+                        + _DEPRECATION.format(key="topology"))
     p.add_argument("--degree", type=int, default=4,
-                   help="k for random_k; pod size for hierarchical")
-    p.add_argument("--topology-seed", type=int, default=0)
+                   help="k for random_k; pod size for hierarchical"
+                        + _DEPRECATION.format(key="degree"))
+    p.add_argument("--topology-seed", type=int, default=0,
+                   help="gossip sampling seed"
+                        + _DEPRECATION.format(key="topology_seed"))
     p.add_argument("--pods", type=int, default=0,
                    help="multi-host dispatch: map hierarchical pods "
                         "onto a two-level (pod, agent) mesh — "
                         "intra-pod exchange stays on the fast agent "
                         "axis, only pod leaders' planes cross the pod "
                         "axis (requires --topology hierarchical and "
-                        "agents == pods * degree; 0 = flat combine)")
+                        "agents == pods * degree; 0 = flat combine)"
+                        + _DEPRECATION.format(key="pods"))
     p.add_argument("--pod-axis", default="pod",
                    help="mesh axis name the leader-level exchange "
-                        "crosses (--pods only)")
+                        "crosses (--pods only)"
+                        + _DEPRECATION.format(key="pod_axis"))
     p.add_argument("--resample-every", type=int, default=0,
                    help="dynamic gossip: resample the random_k "
                         "neighbor table every N steps inside the "
                         "jitted loop (0 = static wiring; requires "
-                        "--topology random_k)")
+                        "--topology random_k)"
+                        + _DEPRECATION.format(key="resample_every"))
     p.add_argument("--relevance-mode", default="uniform",
                    choices=["uniform", "grad_cos"],
                    help="eq. 4 per-edge relevance R: 'uniform' "
                         "(paper §6 static prior) or 'grad_cos' "
                         "(learned online from the cosine similarity "
-                        "of the agents' share-window gradients)")
+                        "of the agents' share-window gradients) "
+                        "[deprecated spelling of --exchange "
+                        "estimator=...]")
     p.add_argument("--relevance-ema", type=float, default=0.9,
                    help="EMA decay of the learned relevance estimate "
-                        "across share steps (grad_cos only)")
+                        "across share steps (grad_cos only)"
+                        + _DEPRECATION.format(key="relevance_ema"))
     p.add_argument("--relevance-sketch-dim", type=int, default=0,
                    help="sketched streaming relevance (grad_cos "
                         "only): project each agent's gradients "
@@ -64,7 +118,9 @@ def main(argv=None):
                         "+ O(agents²·d) comparisons instead of "
                         "O(agents²·|params|); 0 = exact pairwise "
                         "cosines (d ≈ 256 keeps worst-case cosine "
-                        "error ≈ 0.06 before EMA averaging)")
+                        "error ≈ 0.06 before EMA averaging)"
+                        + _DEPRECATION.format(
+                            key="relevance_sketch_dim"))
     p.add_argument("--full", action="store_true",
                    help="full (not reduced) config — TPU pods only")
     p.add_argument("--mesh", default="cpu",
@@ -93,25 +149,32 @@ def main(argv=None):
     cfg = get_arch_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+    # legacy named flags first, --exchange key=value pairs layered on
+    # top (later spellings win) — both feed the same GroupSpec fields
+    spec_kw = dict(topology=args.topology, degree=args.degree,
+                   pods=args.pods, pod_axis=args.pod_axis,
+                   topology_seed=args.topology_seed,
+                   resample_every=args.resample_every,
+                   relevance_mode=args.relevance_mode,
+                   relevance_ema=args.relevance_ema,
+                   relevance_sketch_dim=args.relevance_sketch_dim)
+    for field, value in args.exchange:
+        spec_kw[field] = value
     spec = GroupSpec(n_agents=args.agents, threshold=args.threshold,
-                     minibatch=args.minibatch, topology=args.topology,
-                     degree=args.degree, pods=args.pods,
-                     pod_axis=args.pod_axis,
-                     topology_seed=args.topology_seed,
-                     resample_every=args.resample_every,
-                     relevance_mode=args.relevance_mode,
-                     relevance_ema=args.relevance_ema,
-                     relevance_sketch_dim=args.relevance_sketch_dim,
-                     knowledge_mode="streaming")
+                     minibatch=args.minibatch,
+                     knowledge_mode="streaming", **spec_kw)
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
     opt = optim.adamw(args.lr)
     stream = StreamSpec(seed=args.seed)
 
+    # mesh wiring reads the merged spec, so --exchange pods=N /
+    # pod_axis=X and the legacy named flags behave identically
     mesh = None
     if args.mesh == "pods":
-        if args.pods < 1:
-            raise SystemExit("--mesh pods needs --pods >= 1")
-        mesh = make_pod_mesh(args.pods, pod_axis=args.pod_axis)
+        if spec.pods < 1:
+            raise SystemExit("--mesh pods needs --pods >= 1 (or "
+                             "--exchange pods=N)")
+        mesh = make_pod_mesh(spec.pods, pod_axis=spec.pod_axis)
         ctx = set_mesh(mesh)
     elif args.mesh != "cpu":
         mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
@@ -122,12 +185,17 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     with ctx:
-        state = init_train_state(cfg, spec, opt, key)
+        # one protocol serves state init and the step: the carried
+        # relevance state and the step's estimator can never drift
+        from repro.core.exchange import build_exchange
+        exchange = build_exchange(spec, mesh, kind="streaming")
+        state = init_train_state(cfg, spec, opt, key,
+                                 exchange=exchange)
         if mesh is not None:
             from repro.launch.shardings import agent_sharded_state
-            state = agent_sharded_state(state, mesh, args.pod_axis)
+            state = agent_sharded_state(state, mesh, spec.pod_axis)
         step_fn = jax.jit(make_group_train_step(cfg, spec, opt,
-                                                mesh=mesh))
+                                                exchange=exchange))
         n_params = sum(int(x.size) for x in
                        jax.tree.leaves(state.params)) // args.agents
         print(f"arch={args.arch} reduced={not args.full} "

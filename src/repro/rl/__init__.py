@@ -17,4 +17,9 @@ from repro.rl.dqn import (  # noqa: F401
     make_dqn_group,
 )
 from repro.rl.envs import CartPole, GridWorld  # noqa: F401
-from repro.rl.rollout import Trajectory, episode_return, run_episode  # noqa: F401
+from repro.rl.rollout import (  # noqa: F401
+    Trajectory,
+    episode_return,
+    obs_moments,
+    run_episode,
+)

@@ -20,7 +20,12 @@ import jax.numpy as jnp
 
 from repro.optim import Optimizer
 from repro.rl import networks as nets
-from repro.rl.rollout import Trajectory, episode_return, run_episode
+from repro.rl.rollout import (
+    Trajectory,
+    episode_return,
+    obs_moments,
+    run_episode,
+)
 
 
 class A2CState(NamedTuple):
@@ -57,8 +62,13 @@ def a2c_loss(params, traj: Trajectory, gamma: float,
 
 
 def make_a2c_callbacks(env, opt: Optimizer, gamma: float = 0.99,
-                       entropy_coef: float = 0.01):
-    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL."""
+                       entropy_coef: float = 0.01,
+                       track_obs: bool = False):
+    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL.
+
+    With ``track_obs`` the metrics carry the episode's observation
+    moments (``repro.rl.rollout.obs_moments``) — the side channel the
+    ``obs_stats`` relevance estimator consumes."""
 
     def gen_grads(state: A2CState, key) -> Tuple[Any, Any, A2CState]:
         def select(obs, k):
@@ -69,6 +79,8 @@ def make_a2c_callbacks(env, opt: Optimizer, gamma: float = 0.99,
         loss, grads = jax.value_and_grad(a2c_loss)(
             state.params, traj, gamma, entropy_coef=entropy_coef)
         metrics = {"loss": loss, "return": episode_return(traj)}
+        if track_obs:
+            metrics["obs_moments"] = obs_moments(traj)
         return grads, metrics, state
 
     def apply_grads(state: A2CState, grads) -> A2CState:
@@ -89,20 +101,25 @@ def make_a2c_group(env, opt: Optimizer, spec, key,
                    hidden: int = 64,
                    relevance: Optional[jnp.ndarray] = None,
                    delay: Optional[jnp.ndarray] = None):
-    """Entry point for a DDA3C group: builds the DDAL loop (over
-    ``spec``'s communication topology, or an explicit ``Topology`` /
-    ``DynamicTopology``) and the initial GroupState. Dynamic gossip
-    (``spec.resample_every``) and online learned relevance
-    (``spec.relevance_mode="grad_cos"``, ``spec.relevance_ema``) are
-    picked up from the spec; a static relevance prior (e.g.
-    ``repro.core.relevance.obs_overlap`` of the agents' observation
-    statistics) can be passed as a dense ``relevance`` matrix.
+    """Entry point for a DDA3C group: builds the exchange protocol
+    for ``spec`` (``repro.core.exchange.build_exchange`` — schedule,
+    relevance estimator, delay model and combiner strategies; an
+    explicit ``Topology`` / ``DynamicTopology`` overrides the graph),
+    the DDAL loop over it, and the initial GroupState. A static
+    relevance prior (e.g. ``repro.core.relevance.obs_overlap``) can
+    be passed as a dense ``relevance`` matrix; with
+    ``spec.exchange_estimator="obs_stats"`` the callbacks stream each
+    episode's observation moments so that prior maintains itself.
     Returns (ddal, group_state)."""
     from repro.core import DDAL
+    from repro.core.exchange import build_exchange
+    exchange = build_exchange(spec, kind="buffer", topology=topology,
+                              relevance=relevance, delay=delay,
+                              obs_dim=env.obs_dim)
     gen, app, pof = make_a2c_callbacks(env, opt, gamma=gamma,
-                                       entropy_coef=entropy_coef)
-    ddal = DDAL(spec, gen, app, pof, topology=topology,
-                relevance=relevance, delay=delay)
+                                       entropy_coef=entropy_coef,
+                                       track_obs=exchange.wants_obs)
+    ddal = DDAL(spec, gen, app, pof, exchange=exchange)
     astates = jax.vmap(lambda k: init_a2c(k, env, opt, hidden))(
         jax.random.split(key, spec.n_agents))
     return ddal, ddal.init(astates)

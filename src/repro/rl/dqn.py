@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_map
 from repro.optim import Optimizer
 from repro.rl import networks as nets
-from repro.rl.rollout import episode_return, run_episode
+from repro.rl.rollout import episode_return, obs_moments, run_episode
 
 
 class Replay(NamedTuple):
@@ -133,8 +133,13 @@ def dqn_loss(params, target_params, batch, gamma: float):
     return jnp.mean(jnp.square(y - q_a))                    # eq. 5
 
 
-def make_dqn_callbacks(env, opt: Optimizer, cfg: DQNConfig):
-    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL."""
+def make_dqn_callbacks(env, opt: Optimizer, cfg: DQNConfig,
+                       track_obs: bool = False):
+    """(gen_grads, apply_grads, params_of) for repro.core.ddal.DDAL.
+
+    With ``track_obs`` the metrics carry the episode's observation
+    moments (``repro.rl.rollout.obs_moments``) — the side channel the
+    ``obs_stats`` relevance estimator consumes."""
 
     def epsilon(t):
         frac = jnp.clip(t.astype(jnp.float32) / cfg.eps_decay, 0.0, 1.0)
@@ -163,6 +168,8 @@ def make_dqn_callbacks(env, opt: Optimizer, cfg: DQNConfig):
                              state.eps_t + 1)
         metrics = {"loss": loss, "return": episode_return(traj),
                    "epsilon": eps}
+        if track_obs:
+            metrics["obs_moments"] = obs_moments(traj)
         return grads, metrics, new_state
 
     def apply_grads(state: DQNState, grads) -> DQNState:
@@ -186,19 +193,25 @@ def make_dqn_group(env, opt: Optimizer, spec, key,
                    cfg: Optional[DQNConfig] = None, topology=None,
                    relevance: Optional[jnp.ndarray] = None,
                    delay: Optional[jnp.ndarray] = None):
-    """Entry point for a DDADQN group: builds the DDAL loop (over
-    ``spec``'s communication topology, or an explicit ``Topology`` /
-    ``DynamicTopology``) and the initial GroupState. Dynamic gossip
-    (``spec.resample_every``) and online learned relevance
-    (``spec.relevance_mode="grad_cos"``, ``spec.relevance_ema``) are
-    picked up from the spec; a static relevance prior (e.g.
-    ``repro.core.relevance.obs_overlap``) can be passed as a dense
-    ``relevance`` matrix. Returns (ddal, group_state)."""
+    """Entry point for a DDADQN group: builds the exchange protocol
+    for ``spec`` (``repro.core.exchange.build_exchange`` — schedule,
+    relevance estimator, delay model and combiner strategies; an
+    explicit ``Topology`` / ``DynamicTopology`` overrides the graph),
+    the DDAL loop over it, and the initial GroupState. A static
+    relevance prior (e.g. ``repro.core.relevance.obs_overlap``) can
+    be passed as a dense ``relevance`` matrix; with
+    ``spec.exchange_estimator="obs_stats"`` the callbacks stream each
+    episode's observation moments so that prior maintains itself.
+    Returns (ddal, group_state)."""
     from repro.core import DDAL
+    from repro.core.exchange import build_exchange
     cfg = cfg or DQNConfig()
-    gen, app, pof = make_dqn_callbacks(env, opt, cfg)
-    ddal = DDAL(spec, gen, app, pof, topology=topology,
-                relevance=relevance, delay=delay)
+    exchange = build_exchange(spec, kind="buffer", topology=topology,
+                              relevance=relevance, delay=delay,
+                              obs_dim=env.obs_dim)
+    gen, app, pof = make_dqn_callbacks(env, opt, cfg,
+                                       track_obs=exchange.wants_obs)
+    ddal = DDAL(spec, gen, app, pof, exchange=exchange)
     astates = jax.vmap(lambda k: init_dqn(k, env, opt, cfg))(
         jax.random.split(key, spec.n_agents))
     return ddal, ddal.init(astates)

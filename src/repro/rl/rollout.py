@@ -3,7 +3,7 @@ experiences"). One epoch = one episode capped at ``env.max_steps``;
 post-terminal steps are masked out, matching the paper's §6 setup."""
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,3 +41,22 @@ def run_episode(env, select_action: Callable, key) -> Trajectory:
 
 def episode_return(traj: Trajectory) -> jnp.ndarray:
     return jnp.sum(traj.rewards)
+
+
+def obs_moments(traj: Trajectory) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray]:
+    """Masked running-moment contributions of one episode's
+    observation stream: ``(obs_sum (d,), sq_sum (), count ())``.
+
+    The ``obs_stats`` relevance estimator
+    (``repro.core.exchange.estimators.ObsStatsEstimator``) merges
+    these into per-agent running obs mean/variance and refreshes the
+    ``repro.core.relevance.obs_overlap`` prior from them — the agent
+    callbacks attach the triple as ``metrics["obs_moments"]`` and the
+    DDAL loop forwards it. Post-terminal steps are masked out, so the
+    moments cover exactly the steps the agent really saw.
+    """
+    m = traj.mask[:, None]
+    obs_sum = jnp.sum(traj.obs * m, axis=0)
+    sq_sum = jnp.sum(jnp.square(traj.obs) * m)
+    return obs_sum, sq_sum, jnp.sum(traj.mask)

@@ -1,0 +1,705 @@
+"""Exchange-protocol API tests (ISSUE 5): registry error surfaces,
+the full (schedule × estimator × combiner) build-and-step matrix,
+``build_exchange`` purity, the new ``relevance_topk`` schedule
+(seeded determinism, relevance bias, the pinned exploration-rate
+property) and ``obs_stats`` estimator (moment algebra, rl
+integration), protocol-vs-legacy-flag equivalence, and the int8
+bit-packed sign path of the off-TPU gradient sketch."""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+from repro.core.exchange import (
+    COMBINERS,
+    DELAYS,
+    ESTIMATORS,
+    SCHEDULES,
+    RelevanceTopKSchedule,
+    build_exchange,
+)
+from repro.core.sharded_ddal import (
+    TrainState,
+    init_knowledge,
+    make_group_train_step,
+)
+
+
+# ----------------------------------------------------------------------
+# registry: unknown keys name the valid choices
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("registry,member", [
+    (SCHEDULES, "static"), (ESTIMATORS, "grad_cos"),
+    (DELAYS, "uniform"), (COMBINERS, "flat"),
+])
+def test_registry_unknown_key_names_choices(registry, member):
+    assert member in registry
+    with pytest.raises(ValueError) as err:
+        registry.get("definitely_not_registered")
+    for choice in registry.choices:
+        assert choice in str(err.value)
+
+
+@pytest.mark.parametrize("field,choices_of", [
+    ("exchange_schedule", SCHEDULES),
+    ("exchange_estimator", ESTIMATORS),
+    ("exchange_delay", DELAYS),
+    ("exchange_combiner", COMBINERS),
+])
+def test_groupspec_validates_exchange_keys(field, choices_of):
+    with pytest.raises(ValueError) as err:
+        GroupSpec(n_agents=4, **{field: "bogus"})
+    for choice in choices_of.choices:
+        assert choice in str(err.value)
+
+
+def test_cli_options_cover_registry_params():
+    from repro.core.exchange import cli_options
+    opts = cli_options()
+    # the four selectors plus every declared strategy parameter
+    for key in ("schedule", "estimator", "delay", "combiner",
+                "resample_every", "relevance_ema",
+                "relevance_sketch_dim", "explore_eps", "pods",
+                "topology", "degree", "max_delay"):
+        assert key in opts, key
+    field, typ = opts["explore_eps"]
+    assert field == "explore_eps" and typ is float
+
+
+# ----------------------------------------------------------------------
+# the build-and-step matrix: every (schedule × estimator × combiner)
+# ----------------------------------------------------------------------
+def _matrix_spec(schedule, estimator, combiner):
+    """A valid GroupSpec for one matrix cell (n=4 throughout)."""
+    kw = dict(n_agents=4, threshold=1, minibatch=2,
+              exchange_schedule=schedule, exchange_estimator=estimator,
+              exchange_combiner=combiner)
+    if estimator in ("grad_cos", "grad_cos+sketch"):
+        kw["relevance_mode"] = "grad_cos"
+    if estimator == "grad_cos+sketch":
+        kw["relevance_sketch_dim"] = 8
+    if schedule in ("dynamic", "relevance_topk"):
+        kw.update(topology="random_k", degree=2, resample_every=2)
+    elif combiner == "pod":
+        kw.update(topology="hierarchical", degree=2, pods=2)
+    else:
+        kw.update(topology="ring")
+    return GroupSpec(**kw)
+
+
+def _streaming_toy_step(spec, exchange, steps=4):
+    opt = optim.sgd(0.1)
+
+    def loss_fn(params, batch):
+        return jnp.mean((params["w"] - batch["x"]) ** 2)
+
+    step = jax.jit(make_group_train_step(None, spec, opt,
+                                         loss_fn=loss_fn,
+                                         exchange=exchange))
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    state = TrainState(
+        params=params, opt_state=jax.vmap(opt.init)(params),
+        know=init_knowledge(params, rel=exchange.streaming_rel_init(),
+                            sketch_dim=exchange.sketch_dim),
+        step=jnp.zeros((), jnp.int32))
+    for i in range(steps):
+        batch = {"x": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+        state, m = step(state, batch)
+        assert bool(jnp.isfinite(m["loss"]).all())
+    return state
+
+
+def _buffer_toy_steps(spec, exchange, epochs=4):
+    def gen(state, key):
+        del key
+        return {"w": state["w"] - state["t"]}, {}, state
+
+    def app(state, g):
+        return {"w": state["w"] - 0.1 * g["w"], "t": state["t"]}
+
+    ddal = DDAL(spec, gen, app, lambda s: {"w": s["w"]},
+                exchange=exchange)
+    gs = ddal.init({"w": jnp.zeros((4, 3)),
+                    "t": jnp.arange(4, dtype=jnp.float32)[:, None]})
+    step = jax.jit(ddal.epoch_step)
+    for e in range(epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), 4))
+    assert bool(jnp.isfinite(gs.agent_states["w"]).all())
+    return gs
+
+
+@pytest.mark.parametrize(
+    "schedule,estimator,combiner",
+    list(itertools.product(SCHEDULES.choices, ESTIMATORS.choices,
+                           COMBINERS.choices)))
+def test_every_registered_combo_builds_and_steps(schedule, estimator,
+                                                 combiner):
+    """Every (schedule × estimator × combiner) cell either builds and
+    takes one jitted step on a toy loss, or — for the structurally
+    impossible cells — fails at build time with an informative error,
+    never inside jit. Impossible: a resampling graph cannot be
+    pod-dispatched (a swapped edge could cross pods without touching
+    a leader), and an observation-fed estimator cannot serve the
+    streaming trainer (no obs side channel — it would silently hold
+    the uniform prior)."""
+    spec = _matrix_spec(schedule, estimator, combiner)
+    kind = "buffer" if combiner == "store" else "streaming"
+    if estimator == "obs_stats" and kind == "streaming":
+        # checked before combiner assembly, so it wins in build order
+        with pytest.raises(ValueError, match="obs"):
+            build_exchange(spec, kind=kind, obs_dim=3)
+        return
+    if combiner == "pod" and schedule in ("dynamic", "relevance_topk"):
+        with pytest.raises(ValueError, match="pod"):
+            build_exchange(spec, kind=kind, obs_dim=3)
+        return
+    ex = build_exchange(spec, kind=kind, obs_dim=3)
+    if combiner == "store":
+        _buffer_toy_steps(spec, ex)
+    else:
+        _streaming_toy_step(spec, ex)
+
+
+def test_kind_mismatch_is_rejected():
+    spec = GroupSpec(n_agents=4)
+    with pytest.raises(ValueError, match="streaming"):
+        make_group_train_step(
+            None, spec, optim.sgd(0.1),
+            loss_fn=lambda p, b: 0.0,
+            exchange=build_exchange(spec, kind="buffer"))
+    with pytest.raises(ValueError, match="buffer"):
+        DDAL(spec, lambda s, k: (s, {}, s), lambda s, g: s,
+             lambda s: s,
+             exchange=build_exchange(spec, kind="streaming"))
+
+
+# ----------------------------------------------------------------------
+# build_exchange purity: same spec ⇒ bitwise-equal steps
+# ----------------------------------------------------------------------
+def test_build_exchange_is_pure_bitwise():
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     topology="random_k", degree=2, resample_every=2,
+                     relevance_mode="grad_cos", relevance_ema=0.5,
+                     knowledge_mode="streaming")
+    states = [
+        _streaming_toy_step(spec, build_exchange(spec,
+                                                 kind="streaming"))
+        for _ in range(2)]
+    for a, b in zip(jax.tree.leaves(states[0]),
+                    jax.tree.leaves(states[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_explicit_exchange_equals_spec_built_bitwise():
+    """Passing exchange=build_exchange(spec) must reproduce the
+    spec-flag construction exactly — the protocol is one object, not
+    a parallel code path."""
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     topology="ring", relevance_mode="grad_cos",
+                     relevance_ema=0.5, knowledge_mode="streaming")
+    implicit = _streaming_toy_step(
+        spec, build_exchange(spec, kind="streaming"))
+
+    opt = optim.sgd(0.1)
+
+    def loss_fn(params, batch):
+        return jnp.mean((params["w"] - batch["x"]) ** 2)
+
+    step = jax.jit(make_group_train_step(None, spec, opt,
+                                         loss_fn=loss_fn))
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    from repro.core.relevance import init_relevance
+    state = TrainState(
+        params=params, opt_state=jax.vmap(opt.init)(params),
+        know=init_knowledge(params, rel=init_relevance(4)),
+        step=jnp.zeros((), jnp.int32))
+    for i in range(4):
+        batch = {"x": jnp.asarray(rng.normal(size=(4, 5)),
+                                  jnp.float32)}
+        state, _ = step(state, batch)
+    np.testing.assert_array_equal(np.asarray(implicit.params["w"]),
+                                  np.asarray(state.params["w"]))
+    np.testing.assert_array_equal(np.asarray(implicit.know.rel),
+                                  np.asarray(state.know.rel))
+
+
+# ----------------------------------------------------------------------
+# relevance_topk: determinism, bias, exploration rate
+# ----------------------------------------------------------------------
+def _topk(n=8, k=3, seed=0, every=2, eps=0.0):
+    from repro.core.topology import random_k
+    return RelevanceTopKSchedule(random_k(n, k, seed), every, seed,
+                                 eps)
+
+
+def test_topk_table_is_k_regular_with_self_slot():
+    sched = _topk(eps=0.3)
+    rel = jnp.ones((8, 8))
+    for e in (0, 2, 4, 100):
+        tab = np.asarray(sched.sample_table(e, rel))
+        assert tab.shape == (8, 3)
+        for i in range(8):
+            row = tab[i]
+            assert row[0] == i                  # dedicated self slot
+            assert (row[1:] != i).all()         # no sampled self-loop
+            assert len(set(row.tolist())) == 3  # distinct
+            assert ((0 <= row) & (row < 8)).all()
+
+
+def test_topk_deterministic_in_seed_and_epoch():
+    """The resampled graph is a pure function of (seed, epoch, R):
+    independently built schedules agree epoch-by-epoch, epochs within
+    a round share the table, and a different seed diverges."""
+    rel = jnp.asarray(
+        np.random.default_rng(3).uniform(0.1, 1.0, (8, 8)), jnp.float32)
+    a, b = _topk(seed=5, eps=0.2), _topk(seed=5, eps=0.2)
+    c = _topk(seed=6, eps=0.2)
+    diverged = False
+    for e in range(0, 12, 2):
+        ta = np.asarray(a.sample_table(e, rel))
+        np.testing.assert_array_equal(ta,
+                                      np.asarray(b.sample_table(e, rel)))
+        # same round ⇒ same table
+        np.testing.assert_array_equal(
+            ta, np.asarray(a.sample_table(e + 1, rel)))
+        diverged |= not np.array_equal(
+            ta, np.asarray(c.sample_table(e, rel)))
+    assert diverged
+
+
+def test_topk_changes_across_rounds_and_under_cond_refresh():
+    sched = _topk(seed=1, eps=0.0)
+    rel = jnp.ones((8, 8))
+    t0 = np.asarray(sched.sample_table(0, rel))
+    t2 = np.asarray(sched.sample_table(2, rel))
+    assert not np.array_equal(t0, t2)
+    # refresh: resample only at round boundaries, else keep the carry
+    nbr = sched.init_table()
+    nbr = sched.refresh(0, nbr, rel)
+    np.testing.assert_array_equal(np.asarray(nbr), t0)
+    kept = sched.refresh(1, nbr, rel)
+    np.testing.assert_array_equal(np.asarray(kept), t0)
+    np.testing.assert_array_equal(np.asarray(sched.refresh(2, kept,
+                                                           rel)), t2)
+
+
+def test_topk_prefers_high_relevance_edges():
+    """With ε = 0 and a relevance matrix that strongly favours a
+    source subset, nearly all sampled gossip edges come from that
+    subset (Gumbel top-k follows the weights)."""
+    n, k = 8, 3
+    sched = _topk(n=n, k=k, seed=0, eps=0.0)
+    favored = set(range(4))
+    R = np.full((n, n), 1e-3, np.float32)
+    R[:4, :] = 1.0                          # sources 0..3 relevant
+    rel = jnp.asarray(R)
+    picked, total = 0, 0
+    for e in range(0, 40, 2):
+        tab = np.asarray(sched.sample_table(e, rel))
+        for i in range(n):
+            for s in tab[i, 1:]:
+                total += 1
+                picked += int(s in favored and s != i)
+    # each favoured row offers ~3–4 of 7 candidates at 1000× weight
+    assert picked / total > 0.9, (picked, total)
+
+
+def test_topk_exploration_rate_matches_eps():
+    """Pinned exploration-rate property: the per-destination ε-coins
+    (exposed as ``explore_mask``) hit their rate over many rounds,
+    and exploring rows take the uniform-gossip fallback (which keeps
+    them k-regular — checked above — and reachable even at R → 0)."""
+    eps = 0.3
+    sched = _topk(n=8, k=3, seed=7, every=1, eps=eps)
+    draws = np.concatenate([np.asarray(sched.explore_mask(e))
+                            for e in range(200)])
+    rate = draws.mean()
+    assert abs(rate - eps) < 0.05, rate
+    # ε = 0 never explores; ε = 1 always explores
+    assert not np.asarray(_topk(eps=0.0).explore_mask(0)).any()
+    assert np.asarray(_topk(eps=1.0).explore_mask(0)).all()
+    # an exploring round at ε=1 is exactly the uniform gossip draw —
+    # low-relevance edges stay reachable
+    rel = jnp.asarray(np.full((8, 8), 1e-3, np.float32))
+    tab = np.asarray(_topk(seed=3, eps=1.0).sample_table(0, rel))
+    assert (tab[:, 0] == np.arange(8)).all()
+
+
+def test_topk_ddal_run_is_replay_deterministic():
+    """Two identical DDAL runs under relevance_topk produce bitwise
+    identical group states — resampling, exploration and the learned
+    R all key off (seed, epoch)."""
+    spec = GroupSpec(n_agents=6, threshold=1, minibatch=2, m_pieces=6,
+                     topology="random_k", degree=3, resample_every=2,
+                     exchange_schedule="relevance_topk",
+                     explore_eps=0.25, relevance_mode="grad_cos",
+                     relevance_ema=0.5, topology_seed=4)
+
+    def run():
+        def gen(state, key):
+            del key
+            return {"w": state["w"] - state["t"]}, {}, state
+
+        def app(state, g):
+            return {"w": state["w"] - 0.1 * g["w"], "t": state["t"]}
+
+        ddal = DDAL(spec, gen, app, lambda s: {"w": s["w"]})
+        gs = ddal.init({"w": jnp.zeros((6, 3)),
+                        "t": jnp.arange(6, dtype=jnp.float32)[:, None]})
+        step = jax.jit(ddal.epoch_step)
+        for e in range(8):
+            gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), 6))
+        return gs
+
+    a, b = run(), run()
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # the carried table is a live topk draw, not the static base
+    assert a.nbr.shape == (6, 3)
+
+
+# ----------------------------------------------------------------------
+# obs_stats: moment algebra + rl integration
+# ----------------------------------------------------------------------
+def test_obs_stats_estimator_separates_clusters():
+    """Two clusters of observation streams: within-cluster relevance
+    stays near 1, cross-cluster decays toward 0."""
+    from repro.core.exchange.estimators import ObsStatsEstimator
+    assert ESTIMATORS.get("obs_stats") is ObsStatsEstimator
+    est = ObsStatsEstimator(0.0, 3)
+    n = 4
+    state = est.init(n)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        # agents 0,1 see N(0, 1); agents 2,3 see N(5, 1)
+        obs = rng.normal(size=(n, 20, 3)).astype(np.float32)
+        obs[2:] += 5.0
+        obs_sum = jnp.asarray(obs.sum(axis=1))
+        sq_sum = jnp.asarray((obs ** 2).sum(axis=(1, 2)))
+        cnt = jnp.full((n,), 20.0)
+        state = est.observe(state, aux=(obs_sum, sq_sum, cnt))
+    R = np.asarray(est.matrix(state))
+    assert R.shape == (n, n)
+    assert R[0, 1] > 0.9 and R[2, 3] > 0.9
+    assert R[0, 2] < 0.05 and R[1, 3] < 0.05
+    # with no aux the state holds bit for bit
+    held = est.observe(state, aux=None)
+    for a, b in zip(state, held):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_obs_stats_a2c_group_end_to_end():
+    """make_a2c_group with the obs_stats estimator: the callbacks
+    stream obs moments, the estimator state accumulates them, and the
+    run stays finite."""
+    from repro.rl import CartPole, make_a2c_group
+    spec = GroupSpec(n_agents=2, threshold=1, minibatch=2, m_pieces=4,
+                     exchange_estimator="obs_stats",
+                     relevance_ema=0.5)
+    env = CartPole()
+    opt = optim.adamw(1e-3)
+    ddal, gs = make_a2c_group(env, opt, spec, jax.random.PRNGKey(0))
+    assert ddal.exchange.wants_obs
+    gs, metrics = jax.jit(lambda g, k: ddal.run(g, k, 4))(
+        gs, jax.random.PRNGKey(1))
+    assert "obs_moments" in metrics
+    count = np.asarray(gs.relevance.count)
+    assert (count > 0).all()               # moments actually streamed
+    R = np.asarray(gs.relevance.rel)
+    assert np.isfinite(R).all() and (R > 0).all() and (R <= 1.0).all()
+    # same environment ⇒ overlapping streams ⇒ high cross relevance
+    assert R[0, 1] > 0.5
+
+
+def test_topk_explicit_topology_keeps_relevance_prior():
+    """Regression: an explicit static Topology + relevance_topk must
+    carry a dense relevance prior across resamples (it used to be
+    silently replaced by ones)."""
+    from repro.core.topology import random_k
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=3,
+                     resample_every=2,
+                     exchange_schedule="relevance_topk")
+    R = jnp.asarray(
+        np.random.default_rng(0).uniform(0.1, 0.9, (6, 6)), jnp.float32)
+    ex = build_exchange(spec, kind="buffer",
+                        topology=random_k(6, 3, 0), relevance=R)
+    topo, _ = ex.topology_at(0, ex.init_table(),
+                             ex.init_relevance())
+    rel = np.asarray(topo.relevance)
+    nbr = np.asarray(topo.nbr)
+    dst = np.arange(6)[:, None]
+    np.testing.assert_allclose(rel, np.asarray(R)[nbr, dst],
+                               rtol=1e-6)
+
+
+def test_explicit_dynamic_topology_honors_delay_model():
+    """Regression: exchange_delay='uniform' must attach to an
+    explicitly supplied DynamicTopology too (it used to be dropped)."""
+    from repro.core.topology import make_topology
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=2,
+                     resample_every=2, max_delay=3,
+                     exchange_delay="uniform")
+    dyn = make_topology(GroupSpec(n_agents=6, topology="random_k",
+                                  degree=2, resample_every=2))
+    ex = build_exchange(spec, kind="buffer", topology=dyn)
+    topo, _ = ex.topology_at(0, ex.init_table(), ex.init_relevance())
+    assert (np.asarray(topo.delay) == 3).all()
+    assert ex.max_delay == 3
+
+
+def test_prebuilt_exchange_rejects_stale_wavg_flag():
+    spec = GroupSpec(n_agents=4)
+    ex = build_exchange(spec, kind="buffer")
+    with pytest.raises(ValueError, match="use_wavg_kernel"):
+        DDAL(spec, lambda s, k: (s, {}, s), lambda s, g: s,
+             lambda s: s, exchange=ex, use_wavg_kernel=True)
+
+
+def test_prebuilt_exchange_rejects_ignored_override_args():
+    """Regression: relevance/topology/delay passed *alongside* a
+    prebuilt exchange used to be silently dropped."""
+    spec = GroupSpec(n_agents=4)
+    R = jnp.ones((4, 4))
+    with pytest.raises(ValueError, match="relevance"):
+        DDAL(spec, lambda s, k: (s, {}, s), lambda s, g: s,
+             lambda s: s, relevance=R,
+             exchange=build_exchange(spec, kind="buffer"))
+    with pytest.raises(ValueError, match="relevance"):
+        make_group_train_step(
+            None, spec, optim.sgd(0.1), relevance=R,
+            loss_fn=lambda p, b: 0.0,
+            exchange=build_exchange(spec, kind="streaming"))
+
+
+def test_explicit_schedule_key_never_silently_downgrades():
+    """Regression: an explicit exchange_schedule must be honored (or
+    rejected) with an explicit topology object — relevance_topk with
+    a DynamicTopology builds the topk resampler around its base, and
+    'dynamic' with a static Topology raises instead of silently
+    running a fixed graph."""
+    from repro.core.topology import DynamicTopology, random_k, ring
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=3,
+                     resample_every=2,
+                     exchange_schedule="relevance_topk")
+    dyn = DynamicTopology(base=random_k(6, 3, 0), resample_every=2,
+                          seed=0)
+    ex = build_exchange(spec, kind="buffer", topology=dyn)
+    assert isinstance(ex.schedule, RelevanceTopKSchedule)
+    spec_d = GroupSpec(n_agents=6, topology="random_k", degree=3,
+                       resample_every=2, exchange_schedule="dynamic")
+    with pytest.raises(ValueError, match="DynamicTopology"):
+        build_exchange(spec_d, kind="buffer", topology=ring(6))
+
+
+def test_static_schedule_key_conflicts_with_resampling_spec():
+    """Regression: exchange_schedule='static' with resample_every > 0
+    used to silently build a resampling DynamicSchedule — both the
+    spec-built and explicit-DynamicTopology routes."""
+    with pytest.raises(ValueError, match="static"):
+        GroupSpec(n_agents=6, topology="random_k", degree=3,
+                  resample_every=5, exchange_schedule="static")
+    from repro.core.topology import DynamicTopology, random_k
+    dyn = DynamicTopology(base=random_k(6, 3, 0), resample_every=2,
+                          seed=0)
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=3,
+                     exchange_schedule="static")
+    with pytest.raises(ValueError, match="static"):
+        build_exchange(spec, kind="buffer", topology=dyn)
+
+
+def test_exact_estimator_rejects_stale_sketch_dim():
+    """Regression: exchange_estimator='grad_cos' (exact) with a
+    sketch dim would silently ignore it — must raise instead."""
+    with pytest.raises(ValueError, match="grad_cos\\+sketch"):
+        GroupSpec(n_agents=4, relevance_mode="grad_cos",
+                  exchange_estimator="grad_cos",
+                  relevance_sketch_dim=64)
+
+
+def test_non_sketching_estimators_reject_sketch_dim():
+    """Validation symmetry: ANY explicit non-sketching estimator with
+    a sketch dim raises instead of silently ignoring it."""
+    for est in ("uniform", "grad_cos", "obs_stats"):
+        with pytest.raises(ValueError, match="sketch"):
+            GroupSpec(n_agents=4, relevance_mode="grad_cos",
+                      exchange_estimator=est, relevance_sketch_dim=64)
+
+
+def test_topk_rejects_uncarryable_per_edge_prior():
+    """A per-edge relevance prior attached to the base topology
+    cannot follow table swaps — reject it (the dense relevance= form
+    is carried fine, pinned above)."""
+    from repro.core.topology import random_k
+    base = random_k(6, 3, 0).with_relevance(
+        jnp.full((6, 3), 0.5), per_edge=True)
+    with pytest.raises(ValueError, match="dense"):
+        RelevanceTopKSchedule(base, 2, 0, 0.1)
+
+
+def test_sketch_estimator_spelling_needs_no_legacy_mode():
+    """Regression: the documented migration spelling
+    GroupSpec(exchange_estimator='grad_cos+sketch',
+    relevance_sketch_dim=d) used to be rejected by the legacy
+    sketch-dim↔relevance_mode validation."""
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     exchange_estimator="grad_cos+sketch",
+                     relevance_sketch_dim=8)
+    ex = build_exchange(spec, kind="streaming")
+    assert ex.learns and ex.sketch_dim == 8
+    _streaming_toy_step(spec, ex)
+
+
+def test_obs_stats_rejected_for_streaming_kind():
+    """The streaming trainer carries no obs side channel — obs_stats
+    must fail at build time, not silently hold the uniform prior."""
+    spec = GroupSpec(n_agents=4, exchange_estimator="obs_stats")
+    with pytest.raises(ValueError, match="obs"):
+        build_exchange(spec, kind="streaming", obs_dim=3)
+
+
+def test_topk_accepts_dense_delay_over_nonuniform_base():
+    """Regression: an explicit DynamicTopology whose delays ride in
+    dense_delay over a non-uniform base used to be spuriously
+    rejected by relevance_topk's early uniform-base validation."""
+    from repro.core.topology import DynamicTopology, random_k
+    base = random_k(6, 3, 0).with_delay(
+        jnp.ones((6, 3), jnp.int32), per_edge=True)
+    dyn = DynamicTopology(base=base, resample_every=2, seed=0,
+                          dense_delay=jnp.ones((6, 6), jnp.int32))
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=3,
+                     resample_every=2,
+                     exchange_schedule="relevance_topk")
+    ex = build_exchange(spec, kind="buffer", topology=dyn)
+    topo, _ = ex.topology_at(0, ex.init_table(), ex.init_relevance())
+    assert (np.asarray(topo.delay) == 1).all()
+
+
+def test_prebuilt_exchange_rejects_ignored_mesh():
+    spec = GroupSpec(n_agents=4)
+    with pytest.raises(ValueError, match="mesh"):
+        make_group_train_step(
+            None, spec, optim.sgd(0.1), loss_fn=lambda p, b: 0.0,
+            mesh=object(),
+            exchange=build_exchange(spec, kind="streaming"))
+
+
+def test_streaming_rejects_delay_models():
+    """The streaming trainer has no delay line; a named delay model
+    must fail at build time, not silently do nothing."""
+    spec = GroupSpec(n_agents=4, topology="ring", max_delay=2,
+                     exchange_delay="uniform")
+    with pytest.raises(ValueError, match="streaming"):
+        build_exchange(spec, kind="streaming")
+    build_exchange(spec, kind="buffer")        # buffer path unaffected
+
+
+def test_cli_exchange_pods_feeds_mesh_wiring():
+    """Regression: `--mesh pods --exchange pods=N` must size the mesh
+    from the merged spec, not the legacy flag default."""
+    from repro.launch import train as T
+    import pytest as _pytest
+    argv = ["--mesh", "pods", "--topology", "hierarchical",
+            "--agents", "4", "--degree", "2", "--steps", "1",
+            "--exchange", "pods=2"]
+    # 2 pods need >= 2 devices; on a 1-device CPU rig the mesh
+    # constructor is what fails — proving spec.pods reached it
+    # (the old code exited first with "--mesh pods needs --pods").
+    with _pytest.raises((ValueError, SystemExit)) as err:
+        T.main(argv + ["--batch", "1", "--seq", "16"])
+    assert "--mesh pods needs" not in str(err.value)
+
+
+# ----------------------------------------------------------------------
+# delay models through the registry
+# ----------------------------------------------------------------------
+def test_hops_delay_model_through_protocol():
+    spec = GroupSpec(n_agents=6, topology="ring", max_delay=2,
+                     exchange_delay="hops")
+    ex = build_exchange(spec, kind="buffer")
+    from repro.core.topology import hop_distances, ring
+    hops = hop_distances(ring(6))
+    topo = ex.static_topology
+    nbr = np.asarray(topo.nbr)
+    delay = np.asarray(topo.delay)
+    mask = np.asarray(topo.mask)
+    for i in range(6):
+        for j in range(topo.degree):
+            if mask[i, j]:
+                assert delay[i, j] == hops[nbr[i, j], i] * 2
+    assert ex.max_delay == int(delay.max())
+
+
+def test_hops_delay_model_rejects_resampling_schedules():
+    spec = GroupSpec(n_agents=6, topology="random_k", degree=2,
+                     resample_every=2, exchange_delay="hops")
+    with pytest.raises(ValueError, match="hops"):
+        build_exchange(spec, kind="buffer")
+
+
+def test_uniform_delay_model_attaches_everywhere():
+    spec = GroupSpec(n_agents=4, topology="ring", max_delay=3,
+                     exchange_delay="uniform")
+    ex = build_exchange(spec, kind="buffer")
+    topo = ex.static_topology
+    d = np.asarray(topo.delay)[np.asarray(topo.mask)]
+    assert (d == 3).all()
+
+
+# ----------------------------------------------------------------------
+# int8 bit-packed sign path (off-TPU sketch bandwidth satellite)
+# ----------------------------------------------------------------------
+def test_sign_block_i8_matches_fp32_stream():
+    from repro.kernels.grad_sketch.kernel import (
+        sign_block,
+        sign_block_i8,
+    )
+    f = np.asarray(sign_block(7, 13, 257, 64))
+    i = np.asarray(sign_block_i8(7, 13, 257, 64))
+    assert i.dtype == np.int8
+    assert set(np.unique(i)) <= {-1, 1}
+    np.testing.assert_array_equal(f, i.astype(np.float32))
+
+
+def _fp32_tiled_oracle(G, seed, dim, offset, block):
+    """The pre-bit-pack tiled walk: same chunking, fp32 sign blocks —
+    the accumulation order the int8 path must reproduce exactly."""
+    from repro.kernels.grad_sketch.kernel import sign_block
+    n, p = G.shape
+    acc = jnp.zeros((n, dim), jnp.float32)
+    start = 0
+    while start < p:
+        w = min(block, p - start)
+        g = jax.lax.slice_in_dim(G, start, start + w, axis=1)
+        s = sign_block(seed, offset + start, w, dim)
+        acc = acc + jnp.dot(g, s, preferred_element_type=jnp.float32)
+        start += w
+    return acc
+
+
+def test_xla_sketch_int8_path_bitwise_vs_fp32_signs():
+    """The tiled XLA projection now generates one (block, d) **int8**
+    sign block per chunk (4× less sign traffic); ±1 is exact in both
+    dtypes, so chunk for chunk it must be bitwise the fp32-sign walk —
+    including ragged tails and the rolled fori_loop path — and within
+    reassociation error of the one-shot jnp oracle."""
+    from repro.kernels.grad_sketch import ref
+    from repro.kernels.grad_sketch.ops import _xla_sketch_flat
+    rng = np.random.default_rng(0)
+    G = jnp.asarray(rng.normal(size=(3, 1000)), jnp.float32)
+    one_shot = np.asarray(ref.sketch_flat(G, 5, 16, offset=9))
+    for block in (256, 100, 8):     # even, ragged tail, rolled loop
+        got = np.asarray(_xla_sketch_flat(G, 5, 16, offset=9,
+                                          block=block))
+        want = np.asarray(_fp32_tiled_oracle(G, 5, 16, 9, block))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_allclose(got, one_shot, rtol=1e-4,
+                                   atol=1e-4)
