@@ -84,6 +84,20 @@ def batch_partition_specs(cfg: ArchConfig, shape: ShapeConfig,
     return {k: per_leaf(v) for k, v in specs.items()}
 
 
+def group_plane_partition_specs(cfg: ArchConfig, mesh,
+                                pod_axis: str = "pod") -> Any:
+    """PartitionSpecs for ``repro.serving.group.GroupServeEngine``'s
+    stacked per-agent serving planes: dim 0 (the agent axis) shards
+    over ``ddal_agent_axis`` — the placement the DDAL trainer already
+    keeps ``TrainState.params`` in, so a ``ParamStore.publish`` from a
+    live trainer is a handoff, not a reshard — and the per-parameter
+    dims stay replicated (the decode step gathers arbitrary tenants'
+    planes per slot, so any device may need any agent's row)."""
+    axis = ddal_agent_axis(mesh, pod_axis)
+    shapes = param_specs(cfg)
+    return jax.tree.map(lambda _: P(axis), shapes)
+
+
 # -- cache rules -------------------------------------------------------
 _CACHE_RULES = {
     # key: {rank: {dim: logical}}. KV caches shard batch + SLOTS

@@ -13,12 +13,47 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 
 # Legacy named flags are kept as thin shims over the --exchange
-# vocabulary (each still works; new strategies never add flags here —
-# they arrive through the registry automatically).
+# vocabulary (each still works, but explicit use now emits a
+# DeprecationWarning pointing at the docs/exchange.md migration
+# table; new strategies never add flags here — they arrive through
+# the registry automatically).
 _DEPRECATION = " [deprecated spelling of --exchange {key}=N]"
+
+# legacy flag → (GroupSpec field, default applied when unset). Flags
+# parse with a None sentinel so only *explicit* use warns.
+_LEGACY_FLAGS = {
+    "topology": ("topology", "full"),
+    "degree": ("degree", 4),
+    "topology-seed": ("topology_seed", 0),
+    "pods": ("pods", 0),
+    "pod-axis": ("pod_axis", "pod"),
+    "resample-every": ("resample_every", 0),
+    "relevance-mode": ("relevance_mode", "uniform"),
+    "relevance-ema": ("relevance_ema", 0.9),
+    "relevance-sketch-dim": ("relevance_sketch_dim", 0),
+}
+
+
+def _legacy_spec_kw(args) -> dict:
+    """Fold the legacy named flags into GroupSpec kwargs, warning on
+    each explicit (non-None) use with its --exchange spelling."""
+    kw = {}
+    for flag, (field, default) in _LEGACY_FLAGS.items():
+        value = getattr(args, field)
+        if value is None:
+            kw[field] = default
+        else:
+            warnings.warn(
+                f"--{flag} is deprecated: spell it --exchange "
+                f"{field}={value} (see docs/exchange.md, 'Migration: "
+                f"old GroupSpec flags -> strategies')",
+                DeprecationWarning, stacklevel=2)
+            kw[field] = value
+    return kw
 
 
 def _exchange_kv(text: str):
@@ -68,18 +103,18 @@ def main(argv=None):
                         "strategies need no new flags. Example: "
                         "--exchange schedule=relevance_topk "
                         "--exchange explore_eps=0.2")
-    p.add_argument("--topology", default="full",
+    p.add_argument("--topology", default=None,
                    choices=["full", "ring", "torus2d", "star",
                             "random_k", "hierarchical"],
                    help="communication graph"
                         + _DEPRECATION.format(key="topology"))
-    p.add_argument("--degree", type=int, default=4,
+    p.add_argument("--degree", type=int, default=None,
                    help="k for random_k; pod size for hierarchical"
                         + _DEPRECATION.format(key="degree"))
-    p.add_argument("--topology-seed", type=int, default=0,
+    p.add_argument("--topology-seed", type=int, default=None,
                    help="gossip sampling seed"
                         + _DEPRECATION.format(key="topology_seed"))
-    p.add_argument("--pods", type=int, default=0,
+    p.add_argument("--pods", type=int, default=None,
                    help="multi-host dispatch: map hierarchical pods "
                         "onto a two-level (pod, agent) mesh — "
                         "intra-pod exchange stays on the fast agent "
@@ -87,17 +122,17 @@ def main(argv=None):
                         "axis (requires --topology hierarchical and "
                         "agents == pods * degree; 0 = flat combine)"
                         + _DEPRECATION.format(key="pods"))
-    p.add_argument("--pod-axis", default="pod",
+    p.add_argument("--pod-axis", default=None,
                    help="mesh axis name the leader-level exchange "
                         "crosses (--pods only)"
                         + _DEPRECATION.format(key="pod_axis"))
-    p.add_argument("--resample-every", type=int, default=0,
+    p.add_argument("--resample-every", type=int, default=None,
                    help="dynamic gossip: resample the random_k "
                         "neighbor table every N steps inside the "
                         "jitted loop (0 = static wiring; requires "
                         "--topology random_k)"
                         + _DEPRECATION.format(key="resample_every"))
-    p.add_argument("--relevance-mode", default="uniform",
+    p.add_argument("--relevance-mode", default=None,
                    choices=["uniform", "grad_cos"],
                    help="eq. 4 per-edge relevance R: 'uniform' "
                         "(paper §6 static prior) or 'grad_cos' "
@@ -105,11 +140,11 @@ def main(argv=None):
                         "of the agents' share-window gradients) "
                         "[deprecated spelling of --exchange "
                         "estimator=...]")
-    p.add_argument("--relevance-ema", type=float, default=0.9,
+    p.add_argument("--relevance-ema", type=float, default=None,
                    help="EMA decay of the learned relevance estimate "
                         "across share steps (grad_cos only)"
                         + _DEPRECATION.format(key="relevance_ema"))
-    p.add_argument("--relevance-sketch-dim", type=int, default=0,
+    p.add_argument("--relevance-sketch-dim", type=int, default=None,
                    help="sketched streaming relevance (grad_cos "
                         "only): project each agent's gradients "
                         "through a seeded ±1 random projection into "
@@ -149,15 +184,10 @@ def main(argv=None):
     cfg = get_arch_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
-    # legacy named flags first, --exchange key=value pairs layered on
-    # top (later spellings win) — both feed the same GroupSpec fields
-    spec_kw = dict(topology=args.topology, degree=args.degree,
-                   pods=args.pods, pod_axis=args.pod_axis,
-                   topology_seed=args.topology_seed,
-                   resample_every=args.resample_every,
-                   relevance_mode=args.relevance_mode,
-                   relevance_ema=args.relevance_ema,
-                   relevance_sketch_dim=args.relevance_sketch_dim)
+    # legacy named flags first (deprecation-warned when explicit),
+    # --exchange key=value pairs layered on top (later spellings win)
+    # — both feed the same GroupSpec fields
+    spec_kw = _legacy_spec_kw(args)
     for field, value in args.exchange:
         spec_kw[field] = value
     spec = GroupSpec(n_agents=args.agents, threshold=args.threshold,

@@ -79,3 +79,39 @@ def dueling_q_values(params, obs):
     a = mlp(params["adv"], h)
     v = mlp(params["val"], h)
     return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+
+# ----------------------------------------------------------------------
+# Serving entry points (repro.serving.group): the policy forward a
+# serving engine routes per request, for RL policies what the token
+# engines' decode step is for LLM policies.
+# ----------------------------------------------------------------------
+def policy_forward(params, obs):
+    """One tenant's policy forward for serving: action logits for a
+    (batched or unbatched) observation."""
+    return policy_logits(params, obs)
+
+
+def group_policy_act(planes, agent_ids, obs, key=None,
+                     temperature: float = 0.0):
+    """Multi-tenant RL policy serving: one forward serves a batch of
+    requests routed across the group.
+
+    ``planes`` carries the stacked per-agent policy parameters (leaves
+    ``(A, *param)`` — the same leading agent axis DDAL trains and
+    ``GroupServeEngine`` decodes under); ``agent_ids`` is the (B,)
+    routing vector and ``obs`` the (B, obs_dim) request batch. Each
+    request's parameters are gathered from the planes and a single
+    vmapped forward advances every tenant — the RL-policy analogue of
+    the group engine's decode step. Returns ``(actions, logits)``;
+    temperature ≤ 0 is greedy argmax, otherwise a softmax sample
+    (``key`` required).
+    """
+    params_b = jax.tree.map(lambda p: p[agent_ids], planes)
+    logits = jax.vmap(policy_forward)(params_b, obs)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+    if key is None:
+        raise ValueError("temperature sampling needs a PRNG key")
+    act = jax.random.categorical(key, logits / temperature)
+    return act.astype(jnp.int32), logits

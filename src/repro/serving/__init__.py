@@ -1,9 +1,27 @@
 """Serving: batched prefill + decode over functional KV/SSM caches,
-plus vLLM-style continuous batching (repro.serving.continuous)."""
+vLLM-style continuous batching (repro.serving.continuous), and
+multi-tenant group serving of every agent's policy from one mesh
+(repro.serving.group) with train→serve hot-swap and request metrics
+(repro.serving.metrics). Shared primitives live in repro.serving.api.
+"""
+from repro.serving.api import (  # noqa: F401
+    Sampler,
+    ServeConfig,
+    StopCriteria,
+    build_prefill_batch,
+    cli_options,
+)
 from repro.serving.continuous import ContinuousBatcher  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     DecodeState,
-    ServeConfig,
     ServeEngine,
     serve_batches,
 )
+from repro.serving.group import (  # noqa: F401
+    GroupRequest,
+    GroupServeEngine,
+    ParamStore,
+    Router,
+    publish_from_trainer,
+)
+from repro.serving.metrics import ServeMetrics  # noqa: F401

@@ -1,0 +1,213 @@
+"""One serving API for every engine (ISSUE 6).
+
+Before this module the three serving code paths each carried private
+copies of the same logic: ``ServeEngine._prefill_impl`` and
+``ContinuousBatcher._prefill1_impl`` were near-copies of the
+family-dispatch prefill, and sampling/stop handling was duplicated
+three ways (the fixed-batch scan, the continuous host loop, the
+per-request refill sample). Everything shape-generic lives here once:
+
+* :class:`ServeConfig` — the serving knobs every engine shares.
+* :func:`build_prefill_batch` — (B, P) prompt ids → the arch family's
+  full prefill batch dict (audio codebooks / vlm vision prefix /
+  default), any B.
+* :func:`prefill` — batch prefill into a fresh cache → per-row
+  next-token logits + the filled cache.
+* :func:`decode_batch` / :func:`last_logits` — the decode-step batch
+  wrapper and next-logit slice.
+* :class:`Sampler` — greedy / temperature sampling, one definition for
+  jitted (B, V) logits and host-side (V,) refill samples alike.
+* :class:`StopCriteria` — eos / max_new_tokens / cache-capacity stop
+  logic, jit-side mask and host-side per-slot verdict.
+* :func:`cache_batch_dims` / :func:`splice_cache` — per-leaf cache
+  batch-dim discovery and B=1→slot splicing for the continuous-style
+  engines.
+
+The single-tenant engines are thin wrappers over these (pinned to
+their pre-refactor outputs by ``tests/test_serving_continuous.py``);
+``repro.serving.group.GroupServeEngine`` consumes the same pieces, so
+multi-tenant serving shares every numeric with the single-tenant
+oracle by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512           # cache capacity
+    max_new_tokens: int = 64
+    temperature: float = 0.0     # 0 → greedy
+    eos_id: int = -1             # -1 → never stops early
+
+
+# ---------------------------------------------------------------------
+# batch construction (the one family-dispatch ladder)
+# ---------------------------------------------------------------------
+def decode_batch(cfg: ArchConfig, tokens, positions) -> Dict[str, Any]:
+    """Wrap a (B, 1) token into the arch's decode-batch dict."""
+    if cfg.family == "audio":
+        t = jnp.broadcast_to(tokens[:, None, :],
+                             (tokens.shape[0], cfg.n_codebooks, 1))
+        return {"tokens": t, "positions": positions}
+    if cfg.family == "vlm":
+        pos3 = jnp.broadcast_to(positions[:, None, :],
+                                (positions.shape[0], 3, 1))
+        return {"tokens": tokens, "positions": pos3}
+    return {"tokens": tokens, "positions": positions}
+
+
+def last_logits(cfg: ArchConfig, logits):
+    """(B, V) next-token logits from a decode/prefill output."""
+    if cfg.family == "audio":                  # (B, C, T, V): codebook 0
+        return logits[:, 0, -1, :]
+    return logits[:, -1, :]
+
+
+def build_prefill_batch(cfg: ArchConfig, tokens) -> Dict[str, Any]:
+    """(B, P) right-padded prompt ids → the family's prefill batch."""
+    B, P = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    if cfg.family == "audio":
+        return {"tokens": jnp.broadcast_to(
+                    tokens[:, None, :], (B, cfg.n_codebooks, P)),
+                "positions": pos,
+                "cond": jnp.zeros((B, cfg.cond_len, cfg.d_model),
+                                  cfg.dtype("compute"))}
+    if cfg.family == "vlm":
+        return {"tokens": tokens,
+                "vision": jnp.zeros((B, cfg.vision_prefix, cfg.d_model),
+                                    cfg.dtype("compute")),
+                "positions": jnp.broadcast_to(
+                    jnp.arange(P + cfg.vision_prefix, dtype=jnp.int32),
+                    (B, 3, P + cfg.vision_prefix))}
+    return {"tokens": tokens, "positions": pos}
+
+
+def prefill(cfg: ArchConfig, model, params, tokens, lengths,
+            max_len: int) -> Tuple[Any, Any]:
+    """Prefill a fresh B-slot cache; next-token logits come from each
+    prompt's LAST real token. tokens: (B, P); lengths: (B,)."""
+    B = tokens.shape[0]
+    cache = model.make_cache(cfg, B, max_len)
+    logits, cache = model.forward(cfg, params,
+                                  build_prefill_batch(cfg, tokens),
+                                  cache)
+    idx = jnp.maximum(lengths - 1, 0)
+    if cfg.family == "audio":
+        nxt = logits[jnp.arange(B), 0, idx, :]
+    else:
+        nxt = logits[jnp.arange(B), idx, :]
+    return nxt, cache
+
+
+# ---------------------------------------------------------------------
+# sampling + stop logic (one definition for all three engines)
+# ---------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """Greedy (temperature ≤ 0) or temperature sampling over the last
+    axis; works on (B, V) jit-side logits and host-side (V,) rows."""
+    temperature: float = 0.0
+
+    def __call__(self, logits, key=None):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StopCriteria:
+    """When a slot's generation ends: eos, token budget, or cache
+    capacity (pos is the post-increment next absolute position)."""
+    eos_id: int = -1
+    max_new_tokens: int = 64
+    max_len: int = 512
+
+    @classmethod
+    def from_serve(cls, serve: ServeConfig) -> "StopCriteria":
+        return cls(eos_id=serve.eos_id,
+                   max_new_tokens=serve.max_new_tokens,
+                   max_len=serve.max_len)
+
+    def eos_done(self, next_tok):
+        """jit-side done contribution of one sampled token."""
+        return next_tok == self.eos_id
+
+    def should_stop(self, n_generated: int, token: int,
+                    pos: int) -> bool:
+        """Host-side per-slot verdict after appending ``token`` as the
+        ``n_generated``-th output, with the slot's next position at
+        ``pos``."""
+        return (token == self.eos_id
+                or n_generated >= self.max_new_tokens
+                or pos >= self.max_len - 1)
+
+
+# ---------------------------------------------------------------------
+# slot-cache plumbing (continuous-style engines)
+# ---------------------------------------------------------------------
+def cache_batch_dims(cfg: ArchConfig, max_len: int) -> Any:
+    """Pytree (matching the cache) of each leaf's batch-dim index.
+
+    Per-leaf batch dims differ across cache families (transformer
+    caches are (L, B, ...), zamba2's mamba states (nb, mpb, B, ...)) —
+    discovered once by diffing ``eval_shape`` at two batch sizes."""
+    model = get_model(cfg)
+    s1 = jax.eval_shape(lambda: model.make_cache(cfg, 1, max_len))
+    s2 = jax.eval_shape(lambda: model.make_cache(cfg, 2, max_len))
+
+    def dim(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch dim in {a.shape}")
+
+    return jax.tree.map(dim, s1, s2)
+
+
+def splice_cache(batch_cache, one_cache, bdims, slot: int):
+    """Insert a B=1 cache into batch slot ``slot`` (static index)."""
+    def put(buf, one, d):
+        idx = [slice(None)] * buf.ndim
+        idx[d] = slot
+        one_idx = [slice(None)] * one.ndim
+        one_idx[d] = 0
+        return buf.at[tuple(idx)].set(one[tuple(one_idx)])
+
+    return jax.tree.map(put, batch_cache, one_cache, bdims)
+
+
+# ---------------------------------------------------------------------
+# --serve key=value vocabulary (mirrors repro.core.exchange.cli_options)
+# ---------------------------------------------------------------------
+# engine-level knobs that live outside ServeConfig; the launcher maps
+# them onto engine constructor / mode selection.
+ENGINE_OPTIONS: Dict[str, type] = {
+    "engine": str,        # batch | continuous | group
+    "slots": int,         # continuous/group batch slots
+    "prompt_pad": int,    # prompt padding granularity
+    "agents": int,        # group mode: tenants sharing the mesh
+    "router": str,        # group mode: fifo | fair
+}
+
+
+def cli_options() -> Dict[str, Tuple[str, type]]:
+    """The full ``--serve key=value`` vocabulary: every
+    :class:`ServeConfig` field plus the engine-level knobs, each
+    mapped to ``(field, type)`` — derived from the dataclass, so new
+    serving knobs never need new argparse plumbing
+    (``repro.launch.serve``)."""
+    opts = {f.name: (f.name, type(f.default))
+            for f in dataclasses.fields(ServeConfig)}
+    opts.update({k: (k, t) for k, t in ENGINE_OPTIONS.items()})
+    return opts

@@ -7,14 +7,16 @@ B=1 into a slot-shaped cache, the result is spliced into the batch
 cache at the freed slot index, and a single jitted decode step advances
 every live slot each iteration.
 
-Per-leaf batch dims differ across cache families (transformer caches
-are (L, B, ...), zamba2's mamba states (nb, mpb, B, ...)) — they are
-discovered once by diffing ``eval_shape`` at two batch sizes.
+Batch construction, sampling, stop logic and the per-leaf cache
+batch-dim discovery come from ``repro.serving.api`` (shared with the
+fixed-batch engine and the multi-tenant group engine); the host loop
+fetches ``nxt``/``pos`` as ONE device→host transfer per decode step
+instead of the seed's O(B) per-slot ``int(...)`` syncs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,22 +24,30 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import get_model
-from repro.serving.engine import ServeConfig, _decode_batch, _last_logits
+from repro.serving.api import (
+    Sampler,
+    ServeConfig,
+    StopCriteria,
+    cache_batch_dims,
+    decode_batch as _decode_batch,
+    last_logits as _last_logits,
+    prefill,
+    splice_cache,
+)
 
 
-def _batch_dims(cfg: ArchConfig, max_len: int) -> Any:
-    """Pytree (matching the cache) of each leaf's batch-dim index."""
-    model = get_model(cfg)
-    s1 = jax.eval_shape(lambda: model.make_cache(cfg, 1, max_len))
-    s2 = jax.eval_shape(lambda: model.make_cache(cfg, 2, max_len))
+def _batch_dims(cfg: ArchConfig, max_len: int):
+    """Back-compat alias of ``repro.serving.api.cache_batch_dims``."""
+    return cache_batch_dims(cfg, max_len)
 
-    def dim(a, b):
-        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-            if x != y:
-                return i
-        raise ValueError(f"no batch dim in {a.shape}")
 
-    return jax.tree.map(dim, s1, s2)
+def pad_prompt(prompt_pad: int, n: int) -> int:
+    """Smallest power-of-2 multiple of ``prompt_pad`` holding ``n``
+    tokens — bounds prefill compilations to O(log max_prompt)."""
+    p = prompt_pad
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass
@@ -63,7 +73,9 @@ class ContinuousBatcher:
         self.B = batch_size
         self.prompt_pad = prompt_pad
         self.model = get_model(cfg)
-        self._bdims = _batch_dims(cfg, serve.max_len)
+        self.sampler = Sampler(serve.temperature)
+        self.stop = StopCriteria.from_serve(serve)
+        self._bdims = cache_batch_dims(cfg, serve.max_len)
         self._prefill1 = jax.jit(self._prefill1_impl)
         self._decode = jax.jit(self._decode_impl)
         self._splice = jax.jit(self._splice_impl,
@@ -72,54 +84,20 @@ class ContinuousBatcher:
     # -- jitted pieces ---------------------------------------------------
     def _prefill1_impl(self, params, tokens, length):
         """B=1 prefill into a fresh 1-slot cache → (next_logits, cache)."""
-        cfg = self.cfg
-        P = tokens.shape[1]
-        pos = jnp.arange(P, dtype=jnp.int32)[None]
-        cache = self.model.make_cache(cfg, 1, self.serve.max_len)
-        if cfg.family == "audio":
-            batch = {"tokens": jnp.broadcast_to(
-                        tokens[:, None, :], (1, cfg.n_codebooks, P)),
-                     "positions": pos,
-                     "cond": jnp.zeros((1, cfg.cond_len, cfg.d_model),
-                                       cfg.dtype("compute"))}
-        elif cfg.family == "vlm":
-            batch = {"tokens": tokens,
-                     "vision": jnp.zeros((1, cfg.vision_prefix,
-                                          cfg.d_model),
-                                         cfg.dtype("compute")),
-                     "positions": jnp.broadcast_to(
-                         jnp.arange(P + cfg.vision_prefix,
-                                    dtype=jnp.int32),
-                         (1, 3, P + cfg.vision_prefix))}
-        else:
-            batch = {"tokens": tokens, "positions": pos}
-        logits, cache = self.model.forward(cfg, params, batch, cache)
-        idx = jnp.maximum(length - 1, 0)
-        nxt = (logits[0, 0, idx] if cfg.family == "audio"
-               else logits[0, idx])
-        return nxt, cache
+        nxt, cache = prefill(self.cfg, self.model, params, tokens,
+                             jnp.reshape(length, (1,)),
+                             self.serve.max_len)
+        return nxt[0], cache
 
     def _splice_impl(self, batch_cache, one_cache, slot: int):
         """Insert a B=1 cache into batch slot ``slot``."""
-        def put(buf, one, d):
-            idx = [slice(None)] * buf.ndim
-            idx[d] = slot
-            one_idx = [slice(None)] * one.ndim
-            one_idx[d] = 0
-            return buf.at[tuple(idx)].set(one[tuple(one_idx)])
-
-        return jax.tree.map(put, batch_cache, one_cache, self._bdims)
+        return splice_cache(batch_cache, one_cache, self._bdims, slot)
 
     def _decode_impl(self, params, cache, tokens, pos, done, key):
         batch = _decode_batch(self.cfg, tokens, pos[:, None])
         logits, cache = self.model.decode(self.cfg, params, batch,
                                           cache)
-        nl = _last_logits(self.cfg, logits)
-        if self.serve.temperature <= 0.0:
-            nxt = jnp.argmax(nl, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jax.random.categorical(
-                key, nl / self.serve.temperature).astype(jnp.int32)
+        nxt = self.sampler(_last_logits(self.cfg, logits), key)
         nxt = jnp.where(done, tokens[:, 0], nxt)
         return cache, nxt
 
@@ -136,29 +114,25 @@ class ContinuousBatcher:
         done = jnp.ones((self.B,), bool)
         results: Dict[int, List[int]] = {}
 
-        def pad_to(r):
-            p = self.prompt_pad
-            while p < len(r):
-                p *= 2
-            return p
-
-        step = 0
         while queue or any(not s.done for s in slots):
             # refill finished slots
             for i, s in enumerate(slots):
                 if s.done and queue:
                     rid, req = queue.pop(0)
-                    P = pad_to(req)
+                    P = pad_prompt(self.prompt_pad, len(req))
                     toks = np.zeros((1, P), np.int32)
                     toks[0, :len(req)] = req
                     key, k = jax.random.split(key)
                     nl, one = self._prefill1(
                         self.params, jnp.asarray(toks),
                         jnp.int32(len(req)))
-                    first = (int(jnp.argmax(nl))
-                             if self.serve.temperature <= 0 else
-                             int(jax.random.categorical(
-                                 k, nl / self.serve.temperature)))
+                    first = int(self.sampler(nl, k))
+                    # prefill's own token may already end the request
+                    # (eos on the first sample, max_new_tokens == 1,
+                    # or a prompt that fills the cache)
+                    if self.stop.should_stop(1, first, len(req)):
+                        results[rid] = [first]
+                        continue
                     cache = self._splice(cache, one, slot=i)
                     tokens = tokens.at[i, 0].set(first)
                     pos = pos.at[i].set(len(req))
@@ -166,23 +140,28 @@ class ContinuousBatcher:
                     slots[i] = _Slot(request_id=rid, tokens=[first],
                                      done=False)
 
+            if not any(not s.done for s in slots):
+                continue        # every refill finished at prefill time
+
             # one decode step for every live slot
             key, k = jax.random.split(key)
             cache, nxt = self._decode(self.params, cache, tokens, pos,
                                       done, k)
             tokens = nxt[:, None]
             pos = pos + 1
+            # ONE device→host transfer per step (not O(B) int() pulls)
+            nxt_h, pos_h = jax.device_get((nxt, pos))
+            finished = []
             for i, s in enumerate(slots):
                 if s.done:
                     continue
-                t = int(nxt[i])
+                t = int(nxt_h[i])
                 s.tokens.append(t)
-                hit_eos = t == self.serve.eos_id
-                full = len(s.tokens) >= self.serve.max_new_tokens
-                out_of_cache = int(pos[i]) >= self.serve.max_len - 1
-                if hit_eos or full or out_of_cache:
+                if self.stop.should_stop(len(s.tokens), t,
+                                         int(pos_h[i])):
                     results[s.request_id] = s.tokens
                     s.done = True
-                    done = done.at[i].set(True)
-            step += 1
+                    finished.append(i)
+            if finished:
+                done = done.at[np.asarray(finished)].set(True)
         return results

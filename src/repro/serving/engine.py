@@ -7,10 +7,13 @@ The decode loop is a single jitted ``lax.scan`` over new tokens with
 per-slot done masking; the host-side ``serve_batches`` helper packs a
 request list into fixed-size batches (static shapes → one compilation).
 Decode-shape dry-runs lower exactly ``decode_step`` (one token + cache).
+
+All shape-generic pieces (prefill batch construction, sampling, stop
+logic) come from ``repro.serving.api`` — shared with the continuous
+batcher and the multi-tenant group engine.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, List, NamedTuple, Sequence, Tuple
 
 import jax
@@ -18,14 +21,17 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import get_model
+from repro.serving.api import (
+    Sampler,
+    ServeConfig,
+    StopCriteria,
+    decode_batch as _decode_batch,
+    last_logits as _last_logits,
+    prefill,
+)
 
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_len: int = 512           # cache capacity
-    max_new_tokens: int = 64
-    temperature: float = 0.0     # 0 → greedy
-    eos_id: int = -1             # -1 → never stops early
+__all__ = ["DecodeState", "ServeConfig", "ServeEngine", "serve_batches",
+           "_decode_batch", "_last_logits"]
 
 
 class DecodeState(NamedTuple):
@@ -33,26 +39,6 @@ class DecodeState(NamedTuple):
     tokens: jnp.ndarray          # (B, 1) last emitted token
     pos: jnp.ndarray             # (B,) next absolute position
     done: jnp.ndarray            # (B,) bool
-
-
-def _decode_batch(cfg: ArchConfig, tokens, positions):
-    """Wrap a (B, 1) token into the arch's decode-batch dict."""
-    if cfg.family == "audio":
-        t = jnp.broadcast_to(tokens[:, None, :],
-                             (tokens.shape[0], cfg.n_codebooks, 1))
-        return {"tokens": t, "positions": positions}
-    if cfg.family == "vlm":
-        pos3 = jnp.broadcast_to(positions[:, None, :],
-                                (positions.shape[0], 3, 1))
-        return {"tokens": tokens, "positions": pos3}
-    return {"tokens": tokens, "positions": positions}
-
-
-def _last_logits(cfg: ArchConfig, logits):
-    """(B, V) next-token logits from a decode/prefill output."""
-    if cfg.family == "audio":                  # (B, C, T, V): codebook 0
-        return logits[:, 0, -1, :]
-    return logits[:, -1, :]
 
 
 class ServeEngine:
@@ -63,69 +49,37 @@ class ServeEngine:
         self.params = params
         self.serve = serve
         self.model = get_model(cfg)
+        self.sampler = Sampler(serve.temperature)
+        self.stop = StopCriteria.from_serve(serve)
         self._prefill = jax.jit(self._prefill_impl)
         self._generate = jax.jit(self._generate_impl)
 
     # -- prefill -------------------------------------------------------
     def _prefill_impl(self, params, tokens, lengths):
         """tokens: (B, P) prompt ids (right-padded); lengths: (B,)."""
-        B, P = tokens.shape
-        cfg = self.cfg
-        pos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
-        cache = self.model.make_cache(cfg, B, self.serve.max_len)
-        if cfg.family == "audio":
-            batch = {"tokens": jnp.broadcast_to(
-                        tokens[:, None, :], (B, cfg.n_codebooks, P)),
-                     "positions": pos,
-                     "cond": jnp.zeros((B, cfg.cond_len, cfg.d_model),
-                                       cfg.dtype("compute"))}
-        elif cfg.family == "vlm":
-            batch = {"tokens": tokens,
-                     "vision": jnp.zeros((B, cfg.vision_prefix,
-                                          cfg.d_model),
-                                         cfg.dtype("compute")),
-                     "positions": jnp.broadcast_to(
-                         jnp.arange(P + cfg.vision_prefix,
-                                    dtype=jnp.int32),
-                         (B, 3, P + cfg.vision_prefix))}
-        else:
-            batch = {"tokens": tokens, "positions": pos}
-        logits, cache = self.model.forward(cfg, params, batch, cache)
-        # next-token logits come from each prompt's LAST real token
-        idx = jnp.maximum(lengths - 1, 0)
-        if cfg.family == "audio":
-            nxt = logits[jnp.arange(B), 0, idx, :]
-        else:
-            nxt = logits[jnp.arange(B), idx, :]
-        return nxt, cache
+        return prefill(self.cfg, self.model, params, tokens, lengths,
+                       self.serve.max_len)
 
     # -- decode loop ---------------------------------------------------
-    def _sample(self, logits, key):
-        if self.serve.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.serve.temperature).astype(jnp.int32)
-
     def _generate_impl(self, params, tokens, lengths, key):
         cfg, serve = self.cfg, self.serve
-        B = tokens.shape[0]
         first_logits, cache = self._prefill_impl(params, tokens, lengths)
         k0, key = jax.random.split(key)
-        tok0 = self._sample(first_logits, k0)
+        tok0 = self.sampler(first_logits, k0)
         state = DecodeState(
             cache=cache,
             tokens=tok0[:, None],
             pos=lengths.astype(jnp.int32),
-            done=tok0 == serve.eos_id,
+            done=self.stop.eos_done(tok0),
         )
 
         def step(st: DecodeState, k):
             batch = _decode_batch(cfg, st.tokens, st.pos[:, None])
             logits, cache = self.model.decode(cfg, params, batch,
                                               st.cache)
-            nxt = self._sample(_last_logits(cfg, logits), k)
+            nxt = self.sampler(_last_logits(cfg, logits), k)
             nxt = jnp.where(st.done, st.tokens[:, 0], nxt)
-            done = st.done | (nxt == serve.eos_id)
+            done = st.done | self.stop.eos_done(nxt)
             new = DecodeState(cache=cache, tokens=nxt[:, None],
                               pos=st.pos + 1, done=done)
             return new, nxt

@@ -1,0 +1,415 @@
+"""Multi-tenant group serving: one mesh serves every agent's policy
+(ISSUE 6).
+
+GARL's premise is many separate agents with separate policies (PAPER.md
+§3); at serving time the group is a natural multi-tenant batch.
+:class:`GroupServeEngine` serves **many agents' policies from one
+device mesh**: requests carry an ``agent_id``, a :class:`Router`
+assigns them to continuous-batching slots, and each jitted decode step
+gathers per-slot parameters from the **stacked per-agent parameter
+planes** — the same leading agent axis ``repro.core.sharded_ddal``
+trains, placeable over the ``("pod", "agent")`` mesh via
+``repro.launch.shardings`` — so one compiled step advances every
+tenant at once. Heterogeneous-agent groups (arXiv 2501.11818) make
+this per-agent parameter routing, not one shared checkpoint, the
+required serving shape.
+
+Train→serve hot-swap: a :class:`ParamStore` holds the published planes
+double-buffered with a monotonic version counter. A live DDAL trainer
+calls ``store.publish(state.params)`` after a share step; the engine
+``acquire()``-s the live buffer at each step boundary, so in-flight
+requests never see a torn update (they continue on whichever buffer
+their next step acquires — a complete plane set either way) and
+requests admitted after the swap serve the new weights from their
+first prefill. The store checkpoints through ``repro.checkpoint.npz``
+(version in the ``__step__`` slot), so a restarted server resumes at
+the published version.
+
+Single-tenant equivalence: with one agent the engine reduces to the
+same prefill / sample / stop pipeline as ``ServeEngine`` (everything
+shared through ``repro.serving.api``), pinned by the equivalence
+oracle in ``tests/test_serving_group.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import get_model
+from repro.serving.api import (
+    Sampler,
+    ServeConfig,
+    StopCriteria,
+    cache_batch_dims,
+    decode_batch as _decode_batch,
+    last_logits as _last_logits,
+    prefill,
+    splice_cache,
+)
+from repro.serving.continuous import pad_prompt
+from repro.serving.metrics import ServeMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupRequest:
+    """One tenant request: which agent's policy, and its prompt."""
+    rid: int
+    agent_id: int
+    prompt: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(self.prompt))
+
+
+# ---------------------------------------------------------------------
+# router: queued requests → freed slots
+# ---------------------------------------------------------------------
+class Router:
+    """Assigns queued requests to freed continuous-batching slots.
+
+    ``fifo`` (default) is strict arrival order — lowest latency when
+    tenants are well-behaved. ``fair`` keeps one queue per agent and
+    round-robins across non-empty agents, so one chatty tenant cannot
+    starve the rest of the group. Both are deterministic in the
+    submission order.
+    """
+
+    def __init__(self, policy: str = "fifo"):
+        if policy not in ("fifo", "fair"):
+            raise ValueError(
+                f"unknown router policy {policy!r}; expected 'fifo' "
+                f"or 'fair'")
+        self.policy = policy
+        self._fifo: deque = deque()
+        self._per_agent: "OrderedDict[int, deque]" = OrderedDict()
+
+    def push(self, req: GroupRequest) -> None:
+        if self.policy == "fifo":
+            self._fifo.append(req)
+        else:
+            self._per_agent.setdefault(req.agent_id, deque()).append(req)
+
+    def pop(self) -> Optional[GroupRequest]:
+        if self.policy == "fifo":
+            return self._fifo.popleft() if self._fifo else None
+        for aid in list(self._per_agent):
+            q = self._per_agent.pop(aid)
+            req = q.popleft()
+            if q:       # rotate: agent re-queues at the back
+                self._per_agent[aid] = q
+            return req
+        return None
+
+    def __len__(self) -> int:
+        if self.policy == "fifo":
+            return len(self._fifo)
+        return sum(len(q) for q in self._per_agent.values())
+
+    def depth(self, agent_id: int) -> int:
+        """Queued requests for one tenant (observability)."""
+        if self.policy == "fifo":
+            return sum(1 for r in self._fifo if r.agent_id == agent_id)
+        return len(self._per_agent.get(agent_id, ()))
+
+
+# ---------------------------------------------------------------------
+# publish/acquire hot-swap store
+# ---------------------------------------------------------------------
+class ParamStore:
+    """Double-buffered stacked per-agent parameter planes + version.
+
+    ``publish`` writes the incoming planes into the *back* buffer,
+    flips the live index and bumps the version — the previous live
+    buffer stays intact until the next publish, so a reader that
+    acquired it keeps a complete, immutable plane set for as long as
+    it needs. ``acquire`` returns ``(planes, version)`` of the live
+    buffer. An optional ``placer`` (e.g. a mesh ``device_put``) runs
+    once per publish, so serving placement happens at the handoff, not
+    per step.
+    """
+
+    def __init__(self, planes: Any, placer=None):
+        self._placer = placer
+        planes = self._place(planes)
+        self._buf: List[Any] = [planes, planes]
+        self._live = 0
+        self._version = 0
+
+    def _place(self, planes):
+        return self._placer(planes) if self._placer is not None \
+            else planes
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n_agents(self) -> int:
+        return int(jax.tree.leaves(self._buf[self._live])[0].shape[0])
+
+    def publish(self, planes: Any) -> int:
+        """Install fresh planes (e.g. a trainer's post-exchange
+        ``state.params``); returns the new version."""
+        back = 1 - self._live
+        self._buf[back] = self._place(planes)
+        self._live = back
+        self._version += 1
+        return self._version
+
+    def acquire(self) -> Tuple[Any, int]:
+        """The live planes and their version (no copy)."""
+        return self._buf[self._live], self._version
+
+    # -- checkpointing (repro.checkpoint.npz) --------------------------
+    def save(self, path: str) -> None:
+        from repro.checkpoint import npz
+        planes, version = self.acquire()
+        npz.save(path, planes, step=version)
+
+    @classmethod
+    def load(cls, path: str, template: Any, placer=None) -> "ParamStore":
+        """Rebuild a store from a published checkpoint; ``template`` is
+        a matching pytree of ShapeDtypeStructs or arrays (e.g. from
+        ``jax.eval_shape`` over the vmapped init)."""
+        from repro.checkpoint import npz
+        store = cls(npz.restore(path, template), placer=placer)
+        store._version = npz.restore_step(path) or 0
+        return store
+
+
+def publish_from_trainer(store: ParamStore, state) -> int:
+    """Push a live DDAL trainer's current per-agent parameter planes
+    (``TrainState.params``, leading agent axis) into the serving
+    store."""
+    return store.publish(state.params)
+
+
+# ---------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------
+@dataclasses.dataclass
+class _Slot:
+    request_id: Optional[int] = None
+    agent_id: int = 0
+    tokens: Optional[list] = None
+    done: bool = True
+
+
+class GroupServeEngine:
+    """Continuous batching across every tenant of a group.
+
+    ``planes`` is either a :class:`ParamStore` or a stacked-params
+    pytree (leaves ``(A, *param)``, the DDAL training layout) which is
+    wrapped in a fresh store. With a ``mesh``, publishes are placed
+    with dim 0 over the mesh's agent axes
+    (``repro.launch.shardings.agent_sharded_state``) so serving and
+    training share the same parameter placement.
+
+    Incremental API (what the load bench drives)::
+
+        engine.submit(GroupRequest(rid, agent_id, prompt))
+        finished = engine.step()     # refill + one jitted decode step
+        engine.drain()               # step() until idle → all results
+
+    ``run(requests)`` is the batch convenience wrapper.
+    """
+
+    def __init__(self, cfg: ArchConfig, planes, serve: ServeConfig,
+                 batch_size: int, prompt_pad: int = 32,
+                 router: Optional[Router] = None,
+                 metrics: Optional[ServeMetrics] = None,
+                 mesh=None, pod_axis: str = "pod", seed: int = 0):
+        self.cfg = cfg
+        self.serve = serve
+        self.B = batch_size
+        self.prompt_pad = prompt_pad
+        self.model = get_model(cfg)
+        self.sampler = Sampler(serve.temperature)
+        self.stop = StopCriteria.from_serve(serve)
+        self.metrics = metrics
+        self.router = router if router is not None else Router()
+        self._seed = seed
+        placer = None
+        if mesh is not None:
+            from repro.launch.shardings import agent_sharded_state
+            placer = lambda p: agent_sharded_state(p, mesh, pod_axis)  # noqa: E731
+        if isinstance(planes, ParamStore):
+            self.store = planes
+        else:
+            self.store = ParamStore(planes, placer=placer)
+        self.n_agents = self.store.n_agents
+        self._bdims = cache_batch_dims(cfg, serve.max_len)
+        self._prefill_a = jax.jit(self._prefill_agent_impl)
+        self._decode = jax.jit(self._group_decode_impl)
+        self._splice = jax.jit(
+            lambda cache, one, slot: splice_cache(cache, one,
+                                                  self._bdims, slot),
+            static_argnames=("slot",))
+        self.reset()
+
+    # -- jitted pieces -------------------------------------------------
+    def _prefill_agent_impl(self, planes, agent_id, tokens, length):
+        """B=1 prefill under ONE tenant's params, gathered from the
+        stacked planes at a traced index (no per-agent recompile)."""
+        params = jax.tree.map(lambda p: p[agent_id], planes)
+        nxt, cache = prefill(self.cfg, self.model, params, tokens,
+                             jnp.reshape(length, (1,)),
+                             self.serve.max_len)
+        return nxt[0], cache
+
+    def _group_decode_impl(self, planes, slot_agent, cache, tokens,
+                           pos, done, key):
+        """One decode step for every live slot, each under its own
+        tenant's parameters: gather (B, *param) per-slot params from
+        the stacked planes, then vmap the single-slot decode over the
+        slot axis (cache leaves map over their discovered batch dims).
+        One jitted step advances every tenant."""
+        cfg, model, bdims = self.cfg, self.model, self._bdims
+        params_b = jax.tree.map(lambda p: p[slot_agent], planes)
+
+        def one(p, tok, ps, cache_i):
+            # vmap stripped the batch dim from every cache leaf;
+            # restore a B=1 batch for the single-slot decode
+            cache1 = jax.tree.map(lambda x, d: jnp.expand_dims(x, d),
+                                  cache_i, bdims)
+            batch = _decode_batch(cfg, tok[None, None], ps[None, None])
+            logits, cache1 = model.decode(cfg, p, batch, cache1)
+            nl = _last_logits(cfg, logits)[0]
+            cache_i = jax.tree.map(lambda x, d: jnp.squeeze(x, d),
+                                   cache1, bdims)
+            return nl, cache_i
+
+        nl, cache = jax.vmap(
+            one, in_axes=(0, 0, 0, bdims),
+            out_axes=(0, bdims))(params_b, tokens[:, 0], pos, cache)
+        nxt = self.sampler(nl, key)
+        nxt = jnp.where(done, tokens[:, 0], nxt)
+        return cache, nxt
+
+    # -- host state ----------------------------------------------------
+    def reset(self) -> None:
+        """Fresh slots/caches/results (the router and store persist)."""
+        self._slots = [_Slot() for _ in range(self.B)]
+        self._cache = self.model.make_cache(self.cfg, self.B,
+                                            self.serve.max_len)
+        self._tokens = jnp.zeros((self.B, 1), jnp.int32)
+        self._pos = jnp.zeros((self.B,), jnp.int32)
+        self._done = jnp.ones((self.B,), bool)
+        self._slot_agent = jnp.zeros((self.B,), jnp.int32)
+        self._key = jax.random.PRNGKey(self._seed)
+        self.results: Dict[int, List[int]] = {}
+
+    # -- public --------------------------------------------------------
+    def submit(self, req: GroupRequest, at: Optional[float] = None
+               ) -> None:
+        """Queue a request; ``at`` backdates its enqueue timestamp to
+        the scheduled (open-loop) arrival time, so queueing delay
+        between arrival and admission is part of measured latency."""
+        if not 0 <= req.agent_id < self.n_agents:
+            raise ValueError(
+                f"request {req.rid}: agent_id {req.agent_id} outside "
+                f"the group (n_agents={self.n_agents})")
+        self.router.push(req)
+        if self.metrics is not None:
+            self.metrics.enqueue(req.rid, req.agent_id, at=at)
+
+    @property
+    def live(self) -> int:
+        return sum(1 for s in self._slots if not s.done)
+
+    @property
+    def idle(self) -> bool:
+        return self.live == 0 and len(self.router) == 0
+
+    def _finish(self, rid: int, tokens: List[int]) -> None:
+        self.results[rid] = tokens
+        if self.metrics is not None:
+            self.metrics.finish(rid, len(tokens))
+
+    def _refill(self) -> None:
+        for i, s in enumerate(self._slots):
+            if not s.done:
+                continue
+            req = self.router.pop()
+            if req is None:
+                return
+            planes, version = self.store.acquire()
+            n = len(req.prompt)
+            P = pad_prompt(self.prompt_pad, n)
+            toks = np.zeros((1, P), np.int32)
+            toks[0, :n] = req.prompt
+            self._key, k = jax.random.split(self._key)
+            if self.metrics is not None:
+                self.metrics.admitted(req.rid, version=version)
+            nl, one = self._prefill_a(planes, jnp.int32(req.agent_id),
+                                      jnp.asarray(toks), jnp.int32(n))
+            first = int(self.sampler(nl, k))
+            if self.metrics is not None:
+                self.metrics.first_token(req.rid)
+            if self.stop.should_stop(1, first, n):
+                self._finish(req.rid, [first])
+                continue
+            self._cache = self._splice(self._cache, one, slot=i)
+            self._tokens = self._tokens.at[i, 0].set(first)
+            self._pos = self._pos.at[i].set(n)
+            self._done = self._done.at[i].set(False)
+            self._slot_agent = self._slot_agent.at[i].set(req.agent_id)
+            self._slots[i] = _Slot(request_id=req.rid,
+                                   agent_id=req.agent_id,
+                                   tokens=[first], done=False)
+
+    def step(self) -> Dict[int, List[int]]:
+        """Refill freed slots from the router, then advance every live
+        slot by one jitted decode step; returns the requests finished
+        during this step ({rid: tokens})."""
+        before = set(self.results)
+        self._refill()
+        if self.metrics is not None:
+            self.metrics.observe_step(len(self.router), self.live)
+        if self.live == 0:
+            return {r: self.results[r]
+                    for r in set(self.results) - before}
+
+        self._key, k = jax.random.split(self._key)
+        planes, _ = self.store.acquire()
+        cache, nxt = self._decode(planes, self._slot_agent,
+                                  self._cache, self._tokens, self._pos,
+                                  self._done, k)
+        self._cache = cache
+        self._tokens = nxt[:, None]
+        self._pos = self._pos + 1
+        # single host transfer per step (the continuous-batcher fix)
+        nxt_h, pos_h = jax.device_get((nxt, self._pos))
+        freed = []
+        for i, s in enumerate(self._slots):
+            if s.done:
+                continue
+            t = int(nxt_h[i])
+            s.tokens.append(t)
+            if self.stop.should_stop(len(s.tokens), t, int(pos_h[i])):
+                self._finish(s.request_id, s.tokens)
+                s.done = True
+                freed.append(i)
+        if freed:
+            self._done = self._done.at[np.asarray(freed)].set(True)
+        return {r: self.results[r] for r in set(self.results) - before}
+
+    def drain(self) -> Dict[int, List[int]]:
+        """step() until no queued or in-flight work remains."""
+        while not self.idle:
+            self.step()
+        return self.results
+
+    def run(self, requests: Sequence[GroupRequest]
+            ) -> Dict[int, List[int]]:
+        """Batch convenience: submit everything, drain, return
+        {rid: tokens}."""
+        for req in requests:
+            self.submit(req)
+        return self.drain()

@@ -44,3 +44,73 @@ def test_more_requests_than_slots():
     out = cb.run([[i + 1] for i in range(7)])
     assert set(out) == set(range(7))
     assert all(len(v) == 3 for v in out.values())
+
+
+# ---------------------------------------------------------------------
+# stop-criteria boundaries (ISSUE 6): eos, max_new_tokens == 1, and a
+# prompt that (nearly) fills the cache — all through the shared
+# repro.serving.api.StopCriteria path
+# ---------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_eos_stops_mid_stream(llama):
+    """The request finishes at the first eos token (inclusive) instead
+    of padding out to max_new_tokens; eos picked mid-way through the
+    eos-free greedy reference so the refill-time and decode-time stop
+    paths both stay honest."""
+    cfg, params = llama
+    prompt = [3, 1, 4, 1, 5]
+    ref = ContinuousBatcher(
+        cfg, params, ServeConfig(max_len=64, max_new_tokens=8),
+        batch_size=2, prompt_pad=8).run([prompt])[0]
+    assert len(ref) == 8
+    eos = ref[3]
+    idx = ref.index(eos)                 # first occurrence may be < 3
+    out = ContinuousBatcher(
+        cfg, params,
+        ServeConfig(max_len=64, max_new_tokens=8, eos_id=eos),
+        batch_size=2, prompt_pad=8).run([prompt])[0]
+    assert out == ref[:idx + 1]
+
+
+def test_max_new_tokens_one(llama):
+    """mnt=1 stops at refill time: exactly one token, the same first
+    token the unbounded run produces."""
+    cfg, params = llama
+    prompt = [7, 8, 9]
+    ref = ContinuousBatcher(
+        cfg, params, ServeConfig(max_len=64, max_new_tokens=8),
+        batch_size=2, prompt_pad=8).run([prompt])[0]
+    out = ContinuousBatcher(
+        cfg, params, ServeConfig(max_len=64, max_new_tokens=1),
+        batch_size=2, prompt_pad=8).run([prompt])[0]
+    assert out == [ref[0]]
+
+
+def test_prompt_fills_cache(llama):
+    """Generation is clipped to the cache capacity: a prompt of n
+    tokens in a max_len cache yields max_len - n tokens, and a prompt
+    at max_len - 1 yields exactly the prefill token."""
+    cfg, params = llama
+    serve = ServeConfig(max_len=32, max_new_tokens=10)
+    cb = ContinuousBatcher(cfg, params, serve, batch_size=2,
+                           prompt_pad=8)
+    long_prompt = [(i % 50) + 1 for i in range(28)]
+    brim_prompt = [(i % 50) + 1 for i in range(31)]
+    out = cb.run([long_prompt, brim_prompt])
+    assert len(out[0]) == 32 - 28
+    assert len(out[1]) == 1              # stopped at refill time
+
+
+def test_empty_request_stream(llama):
+    cfg, params = llama
+    cb = ContinuousBatcher(cfg, params,
+                           ServeConfig(max_len=32, max_new_tokens=2),
+                           batch_size=2, prompt_pad=8)
+    assert cb.run([]) == {}

@@ -1,0 +1,381 @@
+"""Multi-tenant group serving (ISSUE 6): single-tenant bitwise
+equivalence with the fixed-batch engine, per-agent routing across one
+jitted decode step, publish/acquire hot-swap, and the trainer→store
+handoff."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_arch_config
+from repro.configs.base import GroupSpec
+from repro.core import init_train_state
+from repro.models import get_model
+from repro.serving import (
+    GroupRequest,
+    GroupServeEngine,
+    ParamStore,
+    Router,
+    ServeConfig,
+    ServeEngine,
+    ServeMetrics,
+    publish_from_trainer,
+)
+
+PAD = 8          # every prompt below fits one pad bucket
+
+
+def _ref_tokens(cfg, params, serve, prompt):
+    """ServeEngine (fixed-batch) greedy reference for one prompt,
+    padded to the same bucket the group engine prefills at."""
+    eng = ServeEngine(cfg, params, serve)
+    toks = np.zeros((1, PAD), np.int32)
+    toks[0, :len(prompt)] = prompt
+    out = eng.generate(jnp.asarray(toks),
+                       jnp.asarray([len(prompt)], jnp.int32))
+    return list(np.asarray(out)[0])
+
+
+def _agent_params(planes, aid):
+    return jax.tree.map(lambda p: p[aid], planes)
+
+
+def _init_planes(cfg, model, n_agents, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_agents)
+    return jax.vmap(lambda k: model.init(cfg, k))(keys)
+
+
+# ---------------------------------------------------------------------
+# single-tenant equivalence oracle
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-780m",
+                                  "deepseek-v2-lite-16b"])
+def test_single_tenant_matches_serve_engine(arch):
+    """With one agent the group engine is bitwise the fixed-batch
+    engine: same prefill/sample/stop pipeline via repro.serving.api."""
+    cfg = get_arch_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    planes = jax.tree.map(lambda p: p[None], params)
+    serve = ServeConfig(max_len=64, max_new_tokens=5)
+    eng = GroupServeEngine(cfg, planes, serve, batch_size=2,
+                           prompt_pad=PAD)
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+    out = eng.run([GroupRequest(rid, 0, pr)
+                   for rid, pr in enumerate(prompts)])
+    assert set(out) == {0, 1, 2}
+    for rid, pr in enumerate(prompts):
+        ref = _ref_tokens(cfg, params, serve, pr)
+        assert out[rid] == ref[:5]
+
+
+# ---------------------------------------------------------------------
+# per-agent routing across one jitted decode step
+# ---------------------------------------------------------------------
+def test_four_agents_one_decode_step():
+    """≥4 tenants live in the same batch: one jitted step advances all
+    of them, and every request decodes under its own agent's params
+    (each matches the single-tenant engine on that agent's row)."""
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    A = 4
+    planes = _init_planes(cfg, model, A)
+    serve = ServeConfig(max_len=64, max_new_tokens=4)
+    eng = GroupServeEngine(cfg, planes, serve, batch_size=A,
+                           prompt_pad=PAD)
+    prompts = [[10 + a, 20 + a, 30 + a] for a in range(A)]
+    for a in range(A):
+        eng.submit(GroupRequest(a, a, prompts[a]))
+    eng.step()
+    assert eng.live == A            # all four tenants in one batch
+    out = eng.drain()
+    # second wave re-uses the freed slots (continuous refill)
+    out2 = eng.run([GroupRequest(A + a, a, prompts[a][::-1])
+                    for a in range(A)])
+    for a in range(A):
+        params_a = _agent_params(planes, a)
+        assert out[a] == _ref_tokens(cfg, params_a, serve,
+                                     prompts[a])[:4]
+        assert out2[A + a] == _ref_tokens(cfg, params_a, serve,
+                                          prompts[a][::-1])[:4]
+
+
+def test_routing_determinism():
+    """Same submission order → identical results, fifo and fair."""
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    planes = _init_planes(cfg, model, 3)
+    serve = ServeConfig(max_len=32, max_new_tokens=3)
+    reqs = [GroupRequest(rid, rid % 3, [rid + 1, rid + 2])
+            for rid in range(7)]
+    for policy in ("fifo", "fair"):
+        eng = GroupServeEngine(cfg, planes, serve, batch_size=2,
+                               prompt_pad=PAD, router=Router(policy))
+        out1 = eng.run(reqs)
+        eng.reset()
+        out2 = eng.run(reqs)
+        assert out1 == out2
+        assert set(out1) == set(range(7))
+
+
+def test_agent_id_out_of_range():
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    planes = _init_planes(cfg, model, 2)
+    eng = GroupServeEngine(cfg, planes,
+                           ServeConfig(max_len=32, max_new_tokens=2),
+                           batch_size=2, prompt_pad=PAD)
+    with pytest.raises(ValueError, match="agent_id"):
+        eng.submit(GroupRequest(0, 2, [1, 2]))
+
+
+def test_empty_request_stream():
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    planes = _init_planes(cfg, model, 1)
+    eng = GroupServeEngine(cfg, planes,
+                           ServeConfig(max_len=32, max_new_tokens=2),
+                           batch_size=2, prompt_pad=PAD)
+    assert eng.run([]) == {}
+
+
+# ---------------------------------------------------------------------
+# router unit behaviour (no jax)
+# ---------------------------------------------------------------------
+def test_fair_router_round_robins_agents():
+    r = Router("fair")
+    for rid, aid in enumerate([0, 0, 0, 1, 2]):
+        r.push(GroupRequest(rid, aid, (1,)))
+    order = [r.pop().agent_id for _ in range(5)]
+    assert order == [0, 1, 2, 0, 0]      # no starvation by agent 0
+    assert r.pop() is None and len(r) == 0
+
+
+def test_fifo_router_preserves_arrival_order():
+    r = Router("fifo")
+    for rid, aid in enumerate([0, 0, 1, 0]):
+        r.push(GroupRequest(rid, aid, (1,)))
+    assert [r.pop().rid for _ in range(4)] == [0, 1, 2, 3]
+    assert r.depth(0) == 0
+
+
+# ---------------------------------------------------------------------
+# publish/acquire hot-swap
+# ---------------------------------------------------------------------
+def test_param_store_publish_acquire_double_buffer():
+    planes0 = {"w": jnp.arange(4.0).reshape(2, 2)}
+    store = ParamStore(planes0)
+    held, v0 = store.acquire()
+    assert v0 == 0 and store.n_agents == 2
+    planes1 = {"w": planes0["w"] + 1}
+    assert store.publish(planes1) == 1
+    live, v1 = store.acquire()
+    assert v1 == 1
+    np.testing.assert_array_equal(np.asarray(live["w"]),
+                                  np.asarray(planes1["w"]))
+    # the buffer a reader acquired before the swap stays intact
+    np.testing.assert_array_equal(np.asarray(held["w"]),
+                                  np.asarray(planes0["w"]))
+
+
+def test_param_store_checkpoint_roundtrip(tmp_path):
+    store = ParamStore({"w": jnp.ones((3, 2))})
+    store.publish({"w": jnp.full((3, 2), 2.0)})
+    path = str(tmp_path / "planes.npz")
+    store.save(path)
+    loaded = ParamStore.load(path, {"w": jnp.zeros((3, 2))})
+    assert loaded.version == 1           # version rides __step__
+    live, _ = loaded.acquire()
+    np.testing.assert_array_equal(np.asarray(live["w"]), 2.0)
+
+
+def test_hot_swap_mid_stream():
+    """A publish mid-decode drops/corrupts nothing: the in-flight
+    request's pre-swap tokens match the old params' reference and it
+    runs to completion; a request admitted after the swap is bitwise
+    what a fresh engine on the new planes produces from the start."""
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    planes0 = _init_planes(cfg, model, 2, seed=0)
+    planes1 = _init_planes(cfg, model, 2, seed=1)
+    serve = ServeConfig(max_len=64, max_new_tokens=8)
+    metrics = ServeMetrics()
+    store = ParamStore(planes0)
+    eng = GroupServeEngine(cfg, store, serve, batch_size=2,
+                           prompt_pad=PAD, metrics=metrics)
+    pr0, pr1 = [1, 2, 3], [4, 5]
+    eng.submit(GroupRequest(0, 0, pr0))
+    for _ in range(3):                   # 1 prefill token + 3 decodes
+        eng.step()
+    store.publish(planes1)
+    eng.submit(GroupRequest(1, 1, pr1))
+    out = eng.drain()
+
+    assert len(out[0]) == 8              # in-flight ran to completion
+    ref0 = _ref_tokens(cfg, _agent_params(planes0, 0), serve, pr0)
+    assert out[0][:4] == ref0[:4]        # pre-swap tokens untouched
+    # post-swap admission == serving the new planes from the start
+    fresh = GroupServeEngine(cfg, planes1, serve, batch_size=2,
+                             prompt_pad=PAD)
+    assert out[1] == fresh.run([GroupRequest(1, 1, pr1)])[1]
+    # observability: each request records the version it was served at
+    assert metrics.traces[0].version == 0
+    assert metrics.traces[1].version == 1
+    assert store.version == 1
+
+
+def test_publish_from_trainer_into_engine():
+    """The train→serve handoff: a DDAL TrainState's stacked params
+    publish straight into the serving store, and the engine serves
+    each agent's trained row."""
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    spec = GroupSpec(n_agents=2, threshold=0, minibatch=1,
+                     knowledge_mode="streaming")
+    state = init_train_state(cfg, spec, optim.adamw(1e-3),
+                             jax.random.PRNGKey(0))
+    store = ParamStore(_init_planes(cfg, model, 2, seed=7))
+    assert publish_from_trainer(store, state) == 1
+    assert store.n_agents == 2
+    serve = ServeConfig(max_len=32, max_new_tokens=3)
+    eng = GroupServeEngine(cfg, store, serve, batch_size=2,
+                           prompt_pad=PAD)
+    out = eng.run([GroupRequest(0, 0, [1, 2, 3]),
+                   GroupRequest(1, 1, [4, 5])])
+    assert out[0] == _ref_tokens(cfg, _agent_params(state.params, 0),
+                                 serve, [1, 2, 3])[:3]
+    assert out[1] == _ref_tokens(cfg, _agent_params(state.params, 1),
+                                 serve, [4, 5])[:3]
+
+
+# ---------------------------------------------------------------------
+# metrics (fake clock → exact numbers)
+# ---------------------------------------------------------------------
+def test_metrics_summary_with_fake_clock():
+    t = [0.0]
+    m = ServeMetrics(clock=lambda: t[0])
+    m.enqueue(0, agent_id=1)
+    t[0] = 0.5
+    m.admitted(0, version=3)
+    m.first_token(0)
+    t[0] = 2.5
+    m.finish(0, n_tokens=4)
+    m.enqueue(1, at=1.0)                 # backdated open-loop arrival
+    t[0] = 3.0
+    m.admitted(1)
+    m.first_token(1)
+    t[0] = 5.0
+    m.finish(1, n_tokens=4)
+    m.observe_step(2, 1)
+    m.observe_swap()
+    s = m.summary()
+    assert s["completed"] == 2 and s["tokens"] == 8
+    assert s["span_s"] == pytest.approx(5.0)      # first enqueue → last finish
+    assert s["latency_p50"] == pytest.approx((2.5 + 4.0) / 2)
+    assert s["ttft_p99"] == pytest.approx(2.0, abs=0.05)
+    assert s["queue_wait_p99"] == pytest.approx(2.0, abs=0.05)
+    assert s["swaps"] == 1 and s["decode_steps"] == 1
+    assert s["per_agent_completed"] == {1: 1, 0: 1}
+    assert m.traces[0].version == 3
+    rows = m.rows()
+    assert [r["rid"] for r in rows] == [0, 1]
+    assert rows[1]["enqueued"] == 1.0
+
+
+# ---------------------------------------------------------------------
+# RL policies: the same plane-gather routing
+# ---------------------------------------------------------------------
+def test_group_policy_act_routes_per_agent():
+    from repro.rl.networks import (group_policy_act, init_policy_value,
+                                   policy_logits)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    planes = jax.vmap(lambda k: init_policy_value(k, 6, 4))(keys)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (5, 6))
+    ids = jnp.asarray([2, 0, 1, 2, 0])
+    acts, logits = group_policy_act(planes, ids, obs)
+    for i in range(5):
+        pi = _agent_params(planes, int(ids[i]))
+        np.testing.assert_allclose(np.asarray(logits[i]),
+                                   np.asarray(policy_logits(pi, obs[i])),
+                                   rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(acts),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    with pytest.raises(ValueError, match="PRNG key"):
+        group_policy_act(planes, ids, obs, temperature=1.0)
+    a1, _ = group_policy_act(planes, ids, obs,
+                             key=jax.random.PRNGKey(2), temperature=1.0)
+    a2, _ = group_policy_act(planes, ids, obs,
+                             key=jax.random.PRNGKey(2), temperature=1.0)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert bool(((a1 >= 0) & (a1 < 4)).all())
+
+
+# ---------------------------------------------------------------------
+# load run (excluded from the CI fast lane; serving-smoke runs the
+# bench directly)
+# ---------------------------------------------------------------------
+@pytest.mark.slow
+def test_serving_load_bench_gates(tmp_path):
+    """The open-loop load bench completes with every gate green and a
+    well-formed BENCH_serving.json."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = str(tmp_path / "bench.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    res = subprocess.run(
+        [sys.executable,
+         os.path.join(repo, "benchmarks", "bench_serving.py"),
+         "--smoke", "--json", out],
+        cwd=repo, env=env, text=True, timeout=600,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    assert res.returncode == 0, res.stdout
+    with open(out) as f:
+        payload = json.load(f)
+    assert all(g["pass"] for g in payload["gates"].values())
+    assert payload["open_loop"]["swapped"]
+    assert len(payload["rows"]) == payload["requests"]
+
+
+# ---------------------------------------------------------------------
+# mesh placement: serving planes share the trainer's layout
+# ---------------------------------------------------------------------
+@pytest.mark.multi_device
+def test_group_planes_on_pod_mesh(multi_device):
+    """On the two-level (pod, agent) mesh the engine's store places
+    publishes with dim 0 over both agent axes — the placement
+    ``group_plane_partition_specs`` declares and the DDAL trainer
+    already keeps — and the group decode runs on the sharded planes."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_pod_mesh
+    from repro.launch.shardings import group_plane_partition_specs
+
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    model = get_model(cfg)
+    mesh = make_pod_mesh(2)              # 8 devices → (pod=2, agent=4)
+    A = 8
+    planes = _init_planes(cfg, model, A)
+    eng = GroupServeEngine(cfg, planes,
+                           ServeConfig(max_len=32, max_new_tokens=2),
+                           batch_size=2, prompt_pad=PAD, mesh=mesh)
+    live, _ = eng.store.acquire()
+    leaf = jax.tree.leaves(live)[0]
+    assert leaf.sharding.spec[0] == ("pod", "agent")
+    specs = group_plane_partition_specs(cfg, mesh)
+    assert all(s == P(("pod", "agent"))
+               for s in jax.tree.leaves(
+                   specs, is_leaf=lambda x: isinstance(x, P)))
+    out = eng.run([GroupRequest(a, a, [1 + a, 2 + a])
+                   for a in range(A)])
+    assert set(out) == set(range(A))
+    assert all(len(v) == 2 for v in out.values())
