@@ -318,6 +318,96 @@ def pod_sweep(args, json_path: "str | None" = None) -> list:
 
 
 # ---------------------------------------------------------------------
+# elastic-membership churn overhead (ISSUE 7)
+# ---------------------------------------------------------------------
+def _churn_thunk(n: int, elastic: bool, n_params: int, epochs: int,
+                 minibatch: int, degree: int, dead=None):
+    """Jitted toy-group runner, elastic or not; ``dead`` (bool mask)
+    pre-kills agents so the steady-state cost with corpses on the
+    roster is measurable too."""
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=minibatch,
+                     m_pieces=8, topology="random_k",
+                     degree=min(degree, n - 1), elastic=elastic)
+    ddal, gs = make_toy_group(spec, n_params)
+    if dead is not None and dead.any():
+        gs = ddal.kill(gs, jnp.asarray(dead))
+    run = jax.jit(lambda g, k: ddal.run(g, k, epochs))
+    key = jax.random.PRNGKey(1)
+    return lambda: run(gs, key)
+
+
+def churn_sweep(args, json_path: "str | None" = None) -> list:
+    """The alive-mask tax: per-epoch time of the elastic exchange —
+    all-alive, and at steady state with ~25% of the roster dead —
+    against the non-elastic program on the same config. Timing is
+    interleaved best-of-N (same discipline as ``acceptance_pair``) so
+    load drift biases neither side. Gate: elastic with everyone alive
+    costs <= 2% over non-elastic. Rows merge into the topology-sweep
+    JSON so one file tracks the whole exchange perf trajectory."""
+    from repro.core.chaos import chaos_schedule
+
+    n = 16 if args.smoke else 64
+    epochs = args.epochs or (10 if args.smoke else 50)
+    repeats = 30 if args.smoke else 20
+    base = _churn_thunk(n, False, args.params, epochs,
+                        args.minibatch, args.degree)
+    live = _churn_thunk(n, True, args.params, epochs,
+                        args.minibatch, args.degree)
+    jax.block_until_ready(base())              # compile + warm-up
+    jax.block_until_ready(live())
+    best_b = best_l = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(base())
+        best_b = min(best_b, time.time() - t0)
+        t0 = time.time()
+        jax.block_until_ready(live())
+        best_l = min(best_l, time.time() - t0)
+    base_ms = best_b / epochs * 1e3
+    live_ms = best_l / epochs * 1e3
+
+    # steady state with corpses: the injector's most lethal epoch
+    sched = chaos_schedule(0, n, 32, kill_prob=0.3, revive_after=6,
+                           min_alive=max(1, n // 2))
+    dead = ~sched[int(np.argmin(sched.sum(axis=1)))]
+    dead_ms = _time_min(
+        _churn_thunk(n, True, args.params, epochs, args.minibatch,
+                     args.degree, dead=dead), epochs)
+
+    overhead = live_ms / base_ms - 1.0
+    rows = [
+        {"n": n, "topology": "churn_off", "k": args.degree,
+         "epoch_ms": base_ms, "alive": n},
+        {"n": n, "topology": "churn_all_alive", "k": args.degree,
+         "epoch_ms": live_ms, "alive": n,
+         "overhead_pct": overhead * 100.0},
+        {"n": n, "topology": "churn_dead", "k": args.degree,
+         "epoch_ms": dead_ms, "alive": int(n - dead.sum())},
+    ]
+    print(f"elastic membership churn (n={n}, random_k(k="
+          f"{args.degree}), {args.params} params/agent):")
+    print(f"{'row':>16} {'alive':>6} {'epoch ms':>9}")
+    for r in rows:
+        print(f"{r['topology']:>16} {r['alive']:6d} "
+              f"{r['epoch_ms']:9.3f}")
+    if json_path:
+        merged = rows
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                old = json.load(f).get("rows", [])
+            merged = [r for r in old if not str(
+                r.get("topology", "")).startswith("churn")] + rows
+        write_json(json_path, "sweep", merged)
+    ok = overhead <= 0.02
+    print(f"\nacceptance: all-alive elastic epoch {live_ms:.3f} ms vs "
+          f"non-elastic {base_ms:.3f} ms (+{overhead:.2%}) "
+          f"→ {'PASS' if ok else 'FAIL'} (gate ≤ 2%)")
+    if not ok:
+        raise SystemExit("elastic membership overhead gate FAILED")
+    return rows
+
+
+# ---------------------------------------------------------------------
 # heterogeneous CartPole/GridWorld adaptive-wiring ablation
 # ---------------------------------------------------------------------
 _OBS_DIM, _N_ACT, _MAX_STEPS = 25, 4, 100
@@ -431,6 +521,12 @@ def main(argv=None):
                    help="run the multi-host pod dispatch sweep "
                         "instead: cross-pod bytes + combine time, "
                         "flat vs two-level placement")
+    p.add_argument("--churn", action="store_true",
+                   help="run the elastic-membership overhead rows "
+                        "instead: epoch time with the alive mask "
+                        "threaded (all-alive, and with ~25%% of the "
+                        "roster dead) vs the non-elastic program "
+                        "(gate: ≤ 2%% all-alive overhead)")
     p.add_argument("--hetero-epochs", type=int, default=None,
                    help="epochs per hetero ablation cell")
     p.add_argument("--resample-every", type=int, default=5,
@@ -451,6 +547,8 @@ def main(argv=None):
 
     if args.pods:
         return pod_sweep(args, args.json or _default_json("pods"))
+    if args.churn:
+        return churn_sweep(args, args.json or _default_json("sweep"))
 
     sizes = [4, 16] if args.smoke else [4, 16, 64, 256]
     epochs = args.epochs or (5 if args.smoke else 20)
@@ -529,7 +627,15 @@ def main(argv=None):
                 print(f"{gossip:>8} {mode:>10} {r['cart_ret']:9.2f} "
                       f"{r['grid_ret']:9.3f} {r['rel_within']:9.3f} "
                       f"{r['rel_cross']:8.3f}")
-    write_json(args.json or _default_json("sweep"), "sweep", rows)
+    json_path = args.json or _default_json("sweep")
+    # the churn rows (--churn mode) share this file: keep them, the
+    # same way churn_sweep keeps these rows
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            old = json.load(f).get("rows", [])
+        rows = rows + [r for r in old if str(
+            r.get("topology", "")).startswith("churn")]
+    write_json(json_path, "sweep", rows)
     return rows
 
 

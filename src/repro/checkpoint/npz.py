@@ -45,9 +45,12 @@ def save(path: str, tree: Any, step: int | None = None) -> None:
             os.unlink(tmp)
 
 
-def restore(path: str, template: Any) -> Any:
+def restore(path: str, template: Any, strict: bool = True) -> Any:
     """Refill ``template``'s leaves from ``path`` (dtypes follow the
-    template; shapes must match exactly)."""
+    template; shapes must match exactly). ``strict=False`` keeps the
+    template's value for leaves absent from the checkpoint — e.g.
+    restoring a pre-elastic checkpoint into an elastic state whose
+    ``alive`` mask the checkpoint never saw."""
     with np.load(path) as data:
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
             template)
@@ -55,6 +58,9 @@ def restore(path: str, template: Any) -> Any:
         for kpath, leaf in paths_leaves:
             key = jax.tree_util.keystr(kpath)
             if key not in data:
+                if not strict:
+                    new_leaves.append(leaf)
+                    continue
                 raise KeyError(f"checkpoint missing leaf {key!r}")
             arr = data[key]
             if tuple(arr.shape) != tuple(leaf.shape):

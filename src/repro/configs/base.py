@@ -246,6 +246,14 @@ class GroupSpec:
     exchange_combiner: str = "auto"   # auto | flat | pod | store
     explore_eps: float = 0.1          # relevance_topk: per-destination
                                       # ε-greedy uniform-gossip rate
+    elastic: bool = False             # elastic membership: thread a
+                                      # per-agent alive mask through
+                                      # the exchange (eq. 4 masking,
+                                      # delay-line drop on death,
+                                      # frozen relevance EMA, gossip
+                                      # exclusion). False keeps every
+                                      # trainer's jitted program
+                                      # structurally unchanged.
 
     def __post_init__(self):
         # deferred imports: repro.core modules import this module for

@@ -36,7 +36,10 @@ from repro.core.sharded_ddal import (  # noqa: F401
     Knowledge,
     TrainState,
     init_train_state,
+    kill_agents,
     make_group_train_step,
+    mask_knowledge,
+    revive_agents,
     train_state_specs,
 )
 from repro.core.relevance import (  # noqa: F401

@@ -64,6 +64,11 @@ class GroupState(NamedTuple):
                                # obs_stats
     nbr: jnp.ndarray           # (n, k) current gossip table (static
                                # topologies carry it untouched)
+    alive: Any = None          # (n,) bool elastic-membership mask;
+                               # None (the default — filtered out of
+                               # the pytree) keeps non-elastic
+                               # programs, shardings and existing
+                               # checkpoints structurally unchanged
 
 
 def _tree_select(pred, a, b):
@@ -129,6 +134,7 @@ class DDAL:
         self.dynamic = isinstance(self.topology, DynamicTopology)
         self.max_delay = exchange.max_delay
         self.use_wavg_kernel = use_wavg_kernel
+        self.elastic = bool(getattr(spec, "elastic", False))
 
     # ------------------------------------------------------------------
     def init(self, agent_states) -> GroupState:
@@ -140,11 +146,13 @@ class DDAL:
             jnp.arange(n))
         flight = K.make_sparse_inflight(params0, self.static_topology,
                                         self.max_delay)
+        alive = jnp.ones((n,), bool) if self.elastic else None
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
                           epoch=jnp.zeros((), jnp.int32),
                           relevance=self.exchange.init_relevance(),
-                          nbr=self.exchange.init_table())
+                          nbr=self.exchange.init_table(),
+                          alive=alive)
 
     # ------------------------------------------------------------------
     def epoch_step(self, gs: GroupState, keys) -> Tuple[GroupState, Any]:
@@ -153,6 +161,12 @@ class DDAL:
         ex = self.exchange
         n = spec.n_agents
         epoch = gs.epoch
+        alive = gs.alive if self.elastic else None
+        if self.elastic and alive is None:
+            raise ValueError(
+                "spec.elastic=True but GroupState.alive is None — the "
+                "state was built by a non-elastic init(); rebuild it "
+                "with this trainer's init()")
         grads, metrics, astates = jax.vmap(self.gen_grads)(
             gs.agent_states, keys)
 
@@ -162,22 +176,22 @@ class DDAL:
         # --- the exchange protocol: graph, relevance, staleness ------
         # (all strategy decisions were resolved at build time — the
         # default strategies trace exactly the legacy ops)
-        topo, nbr = ex.topology_at(epoch, gs.nbr, gs.relevance)
+        topo, nbr = ex.topology_at(epoch, gs.nbr, gs.relevance, alive)
         aux = (metrics.get("obs_moments")
                if ex.wants_obs and isinstance(metrics, dict) else None)
         learned = ex.observe(gs.relevance, grads=grads, aux=aux,
-                             rnd=epoch, enabled=sharing)
+                             rnd=epoch, enabled=sharing, alive=alive)
         topo = ex.apply_relevance(topo, learned)
 
         # --- lines 8–10: append + async exchange over the graph -------
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
                              (n,))
         flight = K.sparse_send(gs.flight, topo, grads, T,
-                               epoch, sharing)
+                               epoch, sharing, alive)
         # the delivery fast-path hint needs only static facts (mask,
         # delay, m % k) — valid whatever the traced nbr table says
         flight, stores = K.sparse_deliver(flight, gs.stores, epoch,
-                                          self.static_topology)
+                                          self.static_topology, alive)
 
         # --- lines 5–6 / 11–14: one update per epoch ------------------
         # warm-up: own grads every epoch; sharing: the eq. 4 average
@@ -204,10 +218,79 @@ class DDAL:
         astates = jax.lax.switch(
             branch, (hold, independent, group_update), astates)
 
+        if self.elastic:
+            # a dead agent is frozen in amber: whatever gen_grads or
+            # the update branch did to its row is discarded, restoring
+            # its pre-epoch state (params, env, replay — everything)
+            astates = _tree_select(alive, astates, gs.agent_states)
+
         new_gs = GroupState(agent_states=astates, stores=stores,
                             flight=flight, epoch=epoch + 1,
-                            relevance=learned, nbr=nbr)
+                            relevance=learned, nbr=nbr,
+                            alive=gs.alive)
         return new_gs, metrics
+
+    # ------------------------------------------------------------------
+    # elastic membership — host-side events between epochs
+    # ------------------------------------------------------------------
+    def kill(self, gs: GroupState, dead) -> GroupState:
+        """Mark agents dead (``dead``: (n,) bool, True = kill now).
+
+        Beyond flipping ``alive``, death scrubs the exchange of every
+        trace of the victims so survivors' streams are as if the dead
+        had simply stopped participating: their queued in-flight
+        planes are dropped (any plane addressed *to* them, and any
+        plane *from* them still riding a delay line — identified
+        through the current gossip table, exact for static topologies
+        and for dynamic ones whose table did not resample within the
+        last ``max_delay`` epochs), and their own knowledge stores are
+        emptied so a later revival replays nothing stale."""
+        if gs.alive is None:
+            raise ValueError("kill() needs an elastic GroupState "
+                             "(spec.elastic=True)")
+        dead = jnp.asarray(dead, bool)
+        alive = gs.alive & jnp.logical_not(dead)
+        # planes to a dead dst, or from a dead src (src of dst-row i,
+        # edge-slot j is nbr[i, j]) — every delay slot
+        drop = dead[gs.nbr] | dead[:, None]              # (n, k)
+        flight = gs.flight._replace(
+            valid=jnp.where(drop[:, :, None], False, gs.flight.valid))
+
+        def clear_rows(x):
+            m = jnp.reshape(dead, (-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(m, jnp.zeros_like(x), x)
+
+        stores = gs.stores._replace(
+            grads=tree_map(clear_rows, gs.stores.grads),
+            T=clear_rows(gs.stores.T), R=clear_rows(gs.stores.R),
+            valid=clear_rows(gs.stores.valid),
+            ptr=jnp.where(dead, 0, gs.stores.ptr))
+        return gs._replace(stores=stores, flight=flight, alive=alive)
+
+    def revive(self, gs: GroupState, mask,
+               restore: Optional[GroupState] = None) -> GroupState:
+        """Bring agents back (``mask``: (n,) bool, True = revive).
+
+        Without ``restore`` the agent resumes from its frozen
+        pre-death state (params, env, replay untouched since
+        ``kill``). With ``restore`` — a checkpointed ``GroupState``,
+        e.g. through ``repro.checkpoint.npz`` — the revived rows'
+        ``agent_states`` and knowledge stores are spliced from the
+        checkpoint instead, so a preempted agent rejoins mid-stream at
+        its last published version without resetting any survivor.
+        Either way its delay-line rows stay cleared: fresh planes
+        start flowing at the next sharing epoch."""
+        if gs.alive is None:
+            raise ValueError("revive() needs an elastic GroupState "
+                             "(spec.elastic=True)")
+        m = jnp.asarray(mask, bool)
+        out = gs._replace(alive=gs.alive | m)
+        if restore is not None:
+            out = out._replace(
+                agent_states=_tree_select(m, restore.agent_states,
+                                          gs.agent_states),
+                stores=_tree_select(m, restore.stores, gs.stores))
+        return out
 
     # ------------------------------------------------------------------
     def run(self, gs: GroupState, key, n_epochs: int

@@ -129,20 +129,24 @@ class ExchangeProtocol:
         return self.estimator.init(self.spec.n_agents)
 
     # -- the protocol --------------------------------------------------
-    def topology_at(self, step, nbr, rel_state=None):
-        """(graph in force at ``step``, refreshed carried table)."""
+    def topology_at(self, step, nbr, rel_state=None, alive=None):
+        """(graph in force at ``step``, refreshed carried table).
+        ``alive`` excludes dead agents from resampled gossip draws
+        (elastic membership) — static tables are alive-gated at the
+        send/combine sites instead."""
         rel = None
         if self.schedule.uses_relevance:
             rel = self.estimator.matrix(rel_state)
-        nbr = self.schedule.refresh(step, nbr, rel)
+        nbr = self.schedule.refresh(step, nbr, rel, alive)
         return self.schedule.materialize(step, nbr, rel), nbr
 
     def observe(self, rel_state, *, grads=None, sketch=None, aux=None,
-                rnd=0, enabled=True):
-        """One estimator update (identity for non-learning modes)."""
+                rnd=0, enabled=True, alive=None):
+        """One estimator update (identity for non-learning modes).
+        ``alive`` freezes estimate entries that touch a dead agent."""
         return self.estimator.observe(rel_state, grads=grads,
                                       sketch=sketch, aux=aux, rnd=rnd,
-                                      enabled=enabled)
+                                      enabled=enabled, alive=alive)
 
     def apply_relevance(self, topo: Topology, rel_state) -> Topology:
         """Effective per-edge R = static prior × learned estimate on
@@ -152,12 +156,13 @@ class ExchangeProtocol:
             return topo
         return _edge_effective(topo, self.estimator.matrix(rel_state))
 
-    def combine(self, knowledge, rel_state, step):
-        """The eq. 4 aggregation of the chosen combiner strategy."""
+    def combine(self, knowledge, rel_state, step, alive=None):
+        """The eq. 4 aggregation of the chosen combiner strategy.
+        ``alive`` masks dead agents' contributions to exactly zero."""
         rel = None
         if self.estimator.learns and rel_state is not None:
             rel = self.estimator.matrix(rel_state)
-        return self.combiner(knowledge, rel, step)
+        return self.combiner(knowledge, rel, step, alive)
 
     def sketch_step(self, grads, rnd):
         """This step's (n, d) window-sketch contribution (sketched

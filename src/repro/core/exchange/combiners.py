@@ -34,7 +34,7 @@ from repro.core.weighting import combine_relevance, relevance_matrix
 
 
 class Combiner:
-    """Interface: ``combine(knowledge, rel, step)``.
+    """Interface: ``combine(knowledge, rel, step, alive=None)``.
 
     ``knowledge`` is trainer-shaped — the streaming
     :class:`~repro.core.sharded_ddal.Knowledge` window for
@@ -42,10 +42,15 @@ class Combiner:
     vmapped :class:`~repro.core.knowledge.KnowledgeStore` for
     ``store`` (returning ``(ḡ, weight_sum)``). ``rel`` is the dense
     learned relevance matrix (``None`` when nothing is learned);
-    ``step`` resolves time-varying topologies.
+    ``step`` resolves time-varying topologies. ``alive`` ((n,) bool,
+    optional — elastic membership) zeroes dead agents' window rows
+    before the aggregation, so a corpse's numerator *and* denominator
+    contributions to eq. 4 are exactly zero (dead destinations'
+    output rows are garbage by construction — the trainer selects
+    them away); ``alive=None`` traces the historical program.
     """
 
-    def __call__(self, knowledge, rel, step):
+    def __call__(self, knowledge, rel, step, alive=None):
         raise NotImplementedError
 
 
@@ -67,7 +72,11 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
     global-sum fast path when nothing weights the edges, the dense
     eq. 4 matmul otherwise."""
     del mesh, use_wavg_kernel
-    from repro.core.sharded_ddal import _combine, _combine_topo
+    from repro.core.sharded_ddal import (
+        _combine,
+        _combine_topo,
+        mask_knowledge,
+    )
     A = spec.n_agents
     learns = estimator.learns
 
@@ -77,25 +86,29 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
         R = (dense_R if dense_R is not None
              else relevance_matrix(A, "uniform"))
         if learns:
-            def combine(knowledge, rel, step):
+            def combine(knowledge, rel, step, alive=None):
                 del step
-                return _combine(knowledge, combine_relevance(R, rel),
+                return _combine(mask_knowledge(knowledge, alive),
+                                combine_relevance(R, rel),
                                 uniform=False)
         else:
-            def combine(knowledge, rel, step):
+            def combine(knowledge, rel, step, alive=None):
                 del rel, step
-                return _combine(knowledge, R, uniform)
+                return _combine(mask_knowledge(knowledge, alive),
+                                R, uniform)
         return combine
 
     if learns:
-        def combine(knowledge, rel, step):
-            topo = _edge_effective(schedule.at_step(step, rel), rel)
-            return _combine_topo(knowledge, topo)
+        def combine(knowledge, rel, step, alive=None):
+            topo = _edge_effective(schedule.at_step(step, rel, alive),
+                                   rel)
+            return _combine_topo(mask_knowledge(knowledge, alive),
+                                 topo)
     else:
-        def combine(knowledge, rel, step):
+        def combine(knowledge, rel, step, alive=None):
             del rel
-            return _combine_topo(knowledge,
-                                 schedule.at_step(step, None))
+            return _combine_topo(mask_knowledge(knowledge, alive),
+                                 schedule.at_step(step, None, alive))
     return combine
 
 
@@ -120,14 +133,14 @@ def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
     pod_combine = make_pod_dispatch(topology, layout, mesh=mesh,
                                     pod_axis=spec.pod_axis)
     if estimator.learns:
-        def combine(knowledge, rel, step):
+        def combine(knowledge, rel, step, alive=None):
             del step
             topo = _edge_effective(topology, rel)
-            return pod_combine(knowledge, topo.relevance)
+            return pod_combine(knowledge, topo.relevance, alive=alive)
     else:
-        def combine(knowledge, rel, step):
+        def combine(knowledge, rel, step, alive=None):
             del rel, step
-            return pod_combine(knowledge)
+            return pod_combine(knowledge, alive=alive)
     return combine
 
 
@@ -140,8 +153,12 @@ def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
     del spec, schedule, estimator, dense_R, mesh
     from repro.core import knowledge as K
 
-    def combine(stores, rel, step):
-        del rel, step
+    def combine(stores, rel, step, alive=None):
+        # store contents are already membership-gated: the buffer
+        # trainer's send/deliver path never lets a dead agent's piece
+        # into a survivor's ring, and a dead destination's own row is
+        # selected away upstream — nothing to mask here
+        del rel, step, alive
         return jax.vmap(
             lambda st: K.weighted_average(st, use_wavg_kernel))(stores)
 

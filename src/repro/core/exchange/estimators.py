@@ -51,13 +51,16 @@ class RelevanceEstimator:
         every accumulation step.
     init(n)
         Fresh estimator state (the uniform prior).
-    observe(state, *, grads, sketch, aux, rnd, enabled)
+    observe(state, *, grads, sketch, aux, rnd, enabled, alive)
         One online update. ``grads`` is a stacked gradient pytree
         (leading (n,) axis), ``sketch`` an already-accumulated (n, d)
         window sketch (preferred over re-sketching ``grads`` when
         given), ``aux`` trainer-specific side data (obs moments),
         ``rnd`` the share-round index seeding per-round projections,
-        ``enabled`` a (traced) bool holding the state during warm-up.
+        ``enabled`` a (traced) bool holding the state during warm-up,
+        ``alive`` ((n,) bool, optional) freezing every estimate entry
+        that touches a dead agent — a corpse's rows/cols hold at
+        their last live value instead of decaying toward garbage.
     matrix(state)
         The dense (n, n) ``R[src, dst]`` the weighting consumes.
     """
@@ -72,7 +75,7 @@ class RelevanceEstimator:
         raise NotImplementedError
 
     def observe(self, state, *, grads=None, sketch=None, aux=None,
-                rnd=0, enabled=True):
+                rnd=0, enabled=True, alive=None):
         raise NotImplementedError
 
     def matrix(self, state) -> jnp.ndarray:
@@ -115,11 +118,11 @@ class GradCosEstimator(RelevanceEstimator):
         return REL.init_relevance(n)
 
     def observe(self, state, *, grads=None, sketch=None, aux=None,
-                rnd=0, enabled=True):
+                rnd=0, enabled=True, alive=None):
         del sketch, aux, rnd
         cos = REL.grad_cosine(grads)
         return REL.ema_update(state, REL.to_relevance(cos), self.ema,
-                              enabled)
+                              enabled, alive)
 
     def matrix(self, state) -> jnp.ndarray:
         return state
@@ -149,7 +152,7 @@ class SketchedGradCosEstimator(RelevanceEstimator):
         return REL.init_relevance(n)
 
     def observe(self, state, *, grads=None, sketch=None, aux=None,
-                rnd=0, enabled=True):
+                rnd=0, enabled=True, alive=None):
         del aux
         if sketch is not None:
             cos = REL.cosine_rows(sketch)
@@ -157,7 +160,7 @@ class SketchedGradCosEstimator(RelevanceEstimator):
             cos = REL.sketch_cosine(grads, self.dim,
                                     REL.fold_seed(self.seed, rnd))
         return REL.ema_update(state, REL.to_relevance(cos), self.ema,
-                              enabled)
+                              enabled, alive)
 
     def matrix(self, state) -> jnp.ndarray:
         return state
@@ -217,13 +220,22 @@ class ObsStatsEstimator(RelevanceEstimator):
             rel=REL.init_relevance(n))
 
     def observe(self, state: ObsStatsState, *, grads=None, sketch=None,
-                aux=None, rnd=0, enabled=True) -> ObsStatsState:
+                aux=None, rnd=0, enabled=True,
+                alive=None) -> ObsStatsState:
         del grads, sketch, rnd
         if aux is None:
             return state
         obs_sum, sq_sum, cnt = aux
         obs_sum = jnp.asarray(obs_sum, jnp.float32)
         cnt = jnp.asarray(cnt, jnp.float32)
+        if alive is not None:
+            # a corpse streams no observations: zero its batch count
+            # so the Chan merge holds its running moments verbatim
+            a = jnp.asarray(alive, bool)
+            cnt = jnp.where(a, cnt, 0.0)
+            obs_sum = jnp.where(a[:, None], obs_sum, 0.0)
+            sq_sum = jnp.where(a, jnp.asarray(sq_sum, jnp.float32),
+                               0.0)
         safe = jnp.maximum(cnt, 1.0)
         batch_mean = obs_sum / safe[:, None]                # (n, d)
         # batch M2 around the batch mean (isotropic, summed over dims)
@@ -241,7 +253,8 @@ class ObsStatsEstimator(RelevanceEstimator):
         obs = REL.obs_overlap(mean, scale)
         have = tot > 0
         rel = REL.ema_update(state.rel, obs, self.ema,
-                             jnp.asarray(enabled) & jnp.any(have))
+                             jnp.asarray(enabled) & jnp.any(have),
+                             alive)
         new = ObsStatsState(count=tot, mean=mean, m2=m2, rel=rel)
         # a zero-count batch (all agents) holds everything
         any_obs = jnp.any(cnt > 0)

@@ -55,15 +55,18 @@ class TopologySchedule:
     init_table()
         The (n, k) int32 gossip table a carried-table loop starts
         from.
-    refresh(step, nbr, rel)
+    refresh(step, nbr, rel, alive)
         The carried table after ``step``: resampling schedules swap it
         at round boundaries (under a ``lax.cond`` over the tiny
         table), static ones return it untouched. ``rel`` is the dense
         (n, n) learned relevance (consumed only by relevance-aware
-        schedules).
+        schedules); ``alive`` ((n,) bool, optional) excludes dead
+        sources from resampled draws — a corpse never receives a
+        fresh gossip edge (static tables are instead masked by the
+        send/combine gates downstream).
     materialize(step, nbr, rel)
         The ``Topology`` in force given the carried table.
-    at_step(step, rel)
+    at_step(step, rel, alive)
         Stateless form — recompute the step's table from scratch. For
         relevance-free schedules this equals the refresh sequence
         when steps are visited in order from 0; a relevance-aware
@@ -84,13 +87,13 @@ class TopologySchedule:
     def init_table(self) -> jnp.ndarray:
         return jnp.asarray(self.base.nbr, jnp.int32)
 
-    def refresh(self, step, nbr, rel):
+    def refresh(self, step, nbr, rel, alive=None):
         raise NotImplementedError
 
     def materialize(self, step, nbr, rel) -> Topology:
         raise NotImplementedError
 
-    def at_step(self, step, rel) -> Topology:
+    def at_step(self, step, rel, alive=None) -> Topology:
         raise NotImplementedError
 
     @property
@@ -109,16 +112,16 @@ class StaticSchedule(TopologySchedule):
         self.base = topo
         self.topology = topo
 
-    def refresh(self, step, nbr, rel):
-        del step, rel
+    def refresh(self, step, nbr, rel, alive=None):
+        del step, rel, alive
         return nbr
 
     def materialize(self, step, nbr, rel) -> Topology:
         del step, nbr, rel
         return self.base
 
-    def at_step(self, step, rel) -> Topology:
-        del step, rel
+    def at_step(self, step, rel, alive=None) -> Topology:
+        del step, rel, alive
         return self.base
 
 
@@ -134,11 +137,11 @@ class DynamicSchedule(TopologySchedule):
         self.base = dyn.base
         self._resampling = dyn.resample_every > 0
 
-    def refresh(self, step, nbr, rel):
+    def refresh(self, step, nbr, rel, alive=None):
         del rel
         if not self._resampling:
             return nbr
-        return self.topology.refresh_table(step, nbr)
+        return self.topology.refresh_table(step, nbr, alive)
 
     def materialize(self, step, nbr, rel) -> Topology:
         del step, rel
@@ -146,9 +149,9 @@ class DynamicSchedule(TopologySchedule):
             return self.base
         return self.topology.with_table(nbr)
 
-    def at_step(self, step, rel) -> Topology:
+    def at_step(self, step, rel, alive=None) -> Topology:
         del rel
-        return self.topology.at_epoch(step)
+        return self.topology.at_epoch(step, alive)
 
 
 @SCHEDULES.register("relevance_topk",
@@ -248,12 +251,16 @@ class RelevanceTopKSchedule(TopologySchedule):
         _, ke, _ = self._round_keys(step)
         return jax.random.bernoulli(ke, self.eps, (n,))
 
-    def sample_table(self, step, rel) -> jnp.ndarray:
+    def sample_table(self, step, rel, alive=None) -> jnp.ndarray:
         """The (n, k) table of ``step``'s resample round — a pure
         (traceable) function of ``(seed, step // resample_every, R)``.
         ``rel=None`` (a non-learning estimator) degenerates to
         uniform-weight Gumbel sampling — every edge equally likely,
-        like ``dynamic``, but through the same code path."""
+        like ``dynamic``, but through the same code path. ``alive``
+        forces dead source columns to −inf before the top-k (and
+        shapes the uniform fallback the same way), so corpses are
+        only picked when fewer than k−1 live candidates remain —
+        those residual edges carry nothing past the send gate."""
         n, k = self.base.nbr.shape
         kg, ke, ku = self._round_keys(step)
         if rel is None:
@@ -265,21 +272,24 @@ class RelevanceTopKSchedule(TopologySchedule):
         # the dedicated self-loop, like sample_gossip's layout
         scores = jnp.log(R.T) + gumbel
         scores = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf, scores)
+        if alive is not None:
+            scores = jnp.where(jnp.asarray(alive, bool)[None, :],
+                               scores, -jnp.inf)
         _, picked = jax.lax.top_k(scores, k - 1)           # (n, k-1)
         self_col = jnp.arange(n, dtype=jnp.int32)[:, None]
         greedy = jnp.concatenate(
             [self_col, picked.astype(jnp.int32)], axis=1)
-        uniform = sample_gossip(ku, n, k)
+        uniform = sample_gossip(ku, n, k, alive)
         explore = jax.random.bernoulli(ke, self.eps, (n,))
         return jnp.where(explore[:, None], uniform, greedy)
 
     # ------------------------------------------------------------------
-    def refresh(self, step, nbr, rel):
+    def refresh(self, step, nbr, rel, alive=None):
         boundary = (jnp.asarray(step, jnp.int32)
                     % self.resample_every) == 0
         return jax.lax.cond(
             boundary,
-            lambda _: self.sample_table(step, rel),
+            lambda _: self.sample_table(step, rel, alive),
             lambda _: jnp.asarray(nbr, jnp.int32),
             None)
 
@@ -287,5 +297,6 @@ class RelevanceTopKSchedule(TopologySchedule):
         del step, rel
         return self.topology.with_table(nbr)
 
-    def at_step(self, step, rel) -> Topology:
-        return self.topology.with_table(self.sample_table(step, rel))
+    def at_step(self, step, rel, alive=None) -> Topology:
+        return self.topology.with_table(
+            self.sample_table(step, rel, alive))

@@ -173,7 +173,7 @@ def make_sparse_inflight(params_like, topo: Topology,
 
 
 def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
-                epoch, enabled) -> SparseInFlight:
+                epoch, enabled, alive=None) -> SparseInFlight:
     """Every agent publishes its piece; each destination gathers it
     from its in-neighbors only.
 
@@ -184,12 +184,23 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     below are trace-polymorphic, and a traced ``delay`` simply takes
     the general one-hot path (delay-plane choice can then differ per
     edge and per epoch).
+
+    ``alive`` ((n,) bool, optional — elastic membership) folds into
+    the per-edge gate: a dead source publishes nothing and a dead
+    destination's line stays empty (so a revival replays no plane
+    staler than its death). With ``alive`` the gate is a traced
+    (n, k) mask, so the blind all-True plane write is skipped and the
+    gated plane/one-hot paths carry the send; ``alive=None`` compiles
+    the historical program unchanged.
     """
     n, k, planes = flight.T.shape
     D1 = planes - 1                    # last plane = disabled scratch
     src = topo.nbr                                   # (n, k)
     en = jnp.asarray(enabled)
     gate = en & topo.mask                            # (n, k)
+    if alive is not None:
+        a = jnp.asarray(alive, bool)
+        gate = gate & a[src] & a[:, None]            # src AND dst alive
     uniform_delay = False
     concrete = not (isinstance(topo.delay, jax.core.Tracer)
                     or isinstance(topo.mask, jax.core.Tracer))
@@ -204,7 +215,7 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
         # of a one-hot select over the whole flight.
         base = (epoch + int(d_np.flat[0])) % D1      # traced scalar
 
-        if bool(np.asarray(topo.mask).all()):
+        if alive is None and bool(np.asarray(topo.mask).all()):
             # no padded edges: route the whole plane write to the
             # scratch slot when disabled — a blind write, no
             # read-modify-write of the live plane and no lax.cond
@@ -280,7 +291,8 @@ def _regular_exchange(topo: "Topology | None", m: int, k: int) -> bool:
 
 
 def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
-                   epoch, topo: "Topology | None" = None
+                   epoch, topo: "Topology | None" = None,
+                   alive=None
                    ) -> Tuple[SparseInFlight, KnowledgeStore]:
     """Pop epoch's arrival slot for every destination and append the
     valid pieces (k per destination) into the vmapped stores.
@@ -299,6 +311,22 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
     valid ones would stomp k live slots; pass ``topo=None`` to force
     the exact general path under arbitrary gating). The general path
     handles partial / masked deliveries.
+
+    ``alive`` ((n,) bool, optional — elastic membership) drops every
+    arrival at a dead destination (defense in depth: the send gate
+    plus ``DDAL.kill``'s delay-line scrub already keep such planes
+    out of flight). On a regular exchange the aligned k-block write
+    is kept — death turns a src's slot into an invalid *hole* (zero
+    eq. 4 weight) rather than compacting it away, so the alive mask
+    costs O(n·k) bool ops instead of the general path's O(n·m·|param|)
+    pass; only the block-advance bit changes (``Vm.any()`` — blocks
+    may now be partial per destination, but every destination still
+    advances in lockstep each sharing epoch). Consequence: the
+    survivor-restriction bitwise oracle on regular configs is the
+    same-shape dead-from-birth run (hole patterns match), and a
+    revived agent's restored ring forgets up to k slots per epoch
+    while its first fresh planes ride the delay line. Irregular
+    exchanges take the general compacting path as always.
     """
     n, k, planes = flight.T.shape
     D1 = planes - 1                    # last plane = disabled scratch
@@ -307,13 +335,18 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
     Tm = flight.T[:, :, slot]
     Rm = flight.R[:, :, slot]
     Vm = flight.valid[:, :, slot]
+    if alive is not None:
+        Vm = Vm & jnp.asarray(alive, bool)[:, None]
     m = stores.T.shape[1]
 
     if _regular_exchange(topo, m, k):
         # all-or-nothing delivery: Vm is uniformly True (sharing) or
-        # False (warm-up); ptr stays k-aligned so the block never wraps
+        # False (warm-up); ptr stays k-aligned so the block never
+        # wraps. Elastic runs write partial blocks (holes at dead
+        # srcs' slots), so the advance bit is any-arrival, not
+        # slot (0, 0) — identical bits when everyone is alive.
         start = stores.ptr[0] % m
-        delivered = Vm[0, 0]
+        delivered = Vm[0, 0] if alive is None else Vm.any()
 
         def wr(buf, xs):
             return jax.lax.dynamic_update_slice_in_dim(

@@ -63,6 +63,7 @@ from repro.core.sharded_ddal import (
     Knowledge,
     _edge_sums,
     _finish_combine,
+    mask_knowledge,
 )
 from repro.core.topology import PodLayout, Topology, cross_pod_mask
 
@@ -186,8 +187,8 @@ def _leader_terms_dense(know: Knowledge, topo: Topology,
 def make_pod_dispatch(topo: Topology, layout: PodLayout, *,
                       mesh=None, pod_axis: str = "pod",
                       agent_axis: str = "agent"):
-    """Build ``combine(know, rel=None) -> ḡ`` for a hierarchical
-    topology placed on pods.
+    """Build ``combine(know, rel=None, alive=None) -> ḡ`` for a
+    hierarchical topology placed on pods.
 
     With ``mesh`` carrying both ``pod_axis`` and ``agent_axis`` the
     combine runs under ``shard_map``: intra-pod sums gather over the
@@ -195,7 +196,12 @@ def make_pod_dispatch(topo: Topology, layout: PodLayout, *,
     the pod axis. Without a mesh (single-device rigs) the identical
     decomposition runs as plain array ops. ``rel`` overrides the
     per-edge relevance table (traced — the learned-R path); ``None``
-    uses the topology's static table.
+    uses the topology's static table. ``alive`` ((n,) bool, elastic
+    membership) zeroes dead agents' accumulator rows *before* either
+    segment runs: a dead leader's cross-pod term is its own (now
+    zero) plane, so nothing of its pod crosses the pod axis, and a
+    dead member contributes zero to its pod's intra sums — dead
+    destinations' output rows are garbage the trainer selects away.
     """
     edges = split_topology(topo, layout)
     if mesh is not None and (pod_axis in mesh.axis_names
@@ -215,8 +221,10 @@ def _make_reference_dispatch(topo: Topology, layout: PodLayout,
     intra_mask = jnp.asarray(edges.intra_mask)
     multi_pod = layout.n_pods > 1
 
-    def combine(know: Knowledge, rel: Optional[jnp.ndarray] = None):
+    def combine(know: Knowledge, rel: Optional[jnp.ndarray] = None,
+                alive=None):
         rel = topo.relevance if rel is None else rel
+        know = mask_knowledge(know, alive)
         tnum, tden, rnum, rden = _edge_sums(
             know, topo.nbr, intra_mask, jnp.where(intra_mask, rel, 0.0))
         if multi_pod:
@@ -357,13 +365,17 @@ def _make_sharded_dispatch(topo: Topology, layout: PodLayout,
     def spec_of(x):
         return P((pod_axis, agent_axis), *([None] * (x.ndim - 1)))
 
-    def combine(know: Knowledge, rel: Optional[jnp.ndarray] = None):
+    def combine(know: Knowledge, rel: Optional[jnp.ndarray] = None,
+                alive=None):
         # the psum fast path assumes unweighted leader edges — the
         # static table can prove that, a (possibly traced) per-edge
         # override cannot, so any override takes the weighted
-        # ppermute chain
+        # ppermute chain. Dead agents' rows are zeroed *before* the
+        # shard_map, so what a dead leader psums/ppermutes across the
+        # pod axis is a zero plane — it carries nothing.
         fast = complete and uniform_leaders and rel is None
         rel = topo.relevance if rel is None else rel
+        know = mask_knowledge(know, alive)
         args = (know.tg, know.tsum, know.rg, know.rsum,
                 jnp.asarray(rel, jnp.float32))
         in_specs = jax.tree.map(spec_of, args)

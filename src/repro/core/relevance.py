@@ -190,12 +190,23 @@ def to_relevance(cos, min_rel: float = 1e-3) -> jnp.ndarray:
     return jnp.clip(0.5 * (1.0 + cos), min_rel, 1.0)
 
 
-def ema_update(prev, obs, decay, enabled=True) -> jnp.ndarray:
+def ema_update(prev, obs, decay, enabled=True,
+               alive=None) -> jnp.ndarray:
     """EMA over share steps: ``decay·prev + (1−decay)·obs`` where
     ``enabled`` (a traced bool is fine), ``prev`` elsewhere — warm-up
-    epochs hold the estimate at its prior."""
+    epochs hold the estimate at its prior.
+
+    ``alive`` ((n,) bool, optional) freezes every entry touching a
+    dead agent: a corpse produces no gradients, so decaying its
+    rows/cols toward the observation would erase a *valid* estimate
+    with garbage — the entry simply holds until both endpoints are
+    alive again. ``alive=None`` is the historical two-way select."""
     new = decay * prev + (1.0 - decay) * obs
-    return jnp.where(jnp.asarray(enabled), new, prev)
+    upd = jnp.asarray(enabled)
+    if alive is not None:
+        a = jnp.asarray(alive, bool)
+        upd = upd & a[:, None] & a[None, :]
+    return jnp.where(upd, new, prev)
 
 
 def gather_edges(dense, nbr) -> jnp.ndarray:

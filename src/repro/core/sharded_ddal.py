@@ -96,6 +96,11 @@ class Knowledge(NamedTuple):
                           # obs_stats; None = uniform (nothing learned)
     sk: Any = None        # (A, d) window gradient sketch; None unless
                           # the estimator sketches (grad_cos+sketch)
+    alive: Any = None     # (A,) bool elastic-membership mask, persisted
+                          # across window resets like rel; None (the
+                          # default — filtered out of the pytree) keeps
+                          # non-elastic programs and existing
+                          # checkpoints/shardings structurally unchanged
 
 
 class TrainState(NamedTuple):
@@ -106,11 +111,12 @@ class TrainState(NamedTuple):
 
 
 def init_knowledge(params, dtype=jnp.float32, rel=None,
-                   sketch_dim: int = 0) -> Knowledge:
+                   sketch_dim: int = 0, alive=None) -> Knowledge:
     """Fresh (zeroed) share-window accumulators. ``rel`` is the learned
     relevance EMA to carry across the window reset — it persists over
     share steps, unlike the window sums (``sketch_dim > 0`` adds the
-    (A, d) window sketch, which resets with them)."""
+    (A, d) window sketch, which resets with them). ``alive`` is the
+    elastic-membership mask, carried across resets like ``rel``."""
     A = jax.tree.leaves(params)[0].shape[0]
     acc = tree_map(lambda x: jnp.zeros(x.shape, jnp.dtype(dtype)),
                    params)
@@ -119,7 +125,7 @@ def init_knowledge(params, dtype=jnp.float32, rel=None,
     return Knowledge(tg=acc, tsum=jnp.zeros((A,), jnp.float32),
                      rg=tree_zeros_like(acc),
                      rsum=jnp.zeros((A,), jnp.float32), rel=rel,
-                     sk=sk)
+                     sk=sk, alive=alive)
 
 
 def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
@@ -136,11 +142,14 @@ def init_train_state(cfg: ArchConfig, spec: GroupSpec, opt: Optimizer,
     keys = jax.random.split(key, spec.n_agents)
     params = jax.vmap(lambda k: model.init(cfg, k))(keys)
     opt_state = jax.vmap(opt.init)(params)
+    alive = (jnp.ones((spec.n_agents,), bool)
+             if getattr(spec, "elastic", False) else None)
     return TrainState(params=params, opt_state=opt_state,
                       know=init_knowledge(params,
                                           jnp.dtype(spec.knowledge_dtype),
                                           rel=exchange.streaming_rel_init(),
-                                          sketch_dim=exchange.sketch_dim),
+                                          sketch_dim=exchange.sketch_dim,
+                                          alive=alive),
                       step=jnp.zeros((), jnp.int32))
 
 
@@ -239,6 +248,89 @@ def _combine_topo(know: Knowledge, topo: Topology):
         *_edge_sums(know, topo.nbr, topo.mask, topo.relevance))
 
 
+# ---------------------------------------------------------------------
+# elastic membership (alive-masked exchange)
+# ---------------------------------------------------------------------
+def _select_rows(mask, new, old):
+    """Per-agent row select over matching pytrees: rows where ``mask``
+    is True come from ``new``, the rest hold ``old`` — the elastic
+    trainer's way of freezing dead agents' params/optimizer rows
+    without multiply-masking live ones."""
+    m = jnp.asarray(mask, bool)
+
+    def sel(n_, o_):
+        mm = jnp.reshape(m, (-1,) + (1,) * (n_.ndim - 1))
+        return jnp.where(mm, n_, o_)
+
+    return tree_map(sel, new, old)
+
+
+def mask_knowledge(know: Knowledge, alive) -> Knowledge:
+    """Zero dead agents' window rows (tg/rg leaves, tsum/rsum scalars,
+    the sk sketch rows) so their eq. 4 numerator *and* denominator
+    contributions are exactly zero in every combiner path — the flat
+    global sum, the dense-R matmul, the ``_edge_sums`` segment-sum and
+    the pod dispatch (a dead leader's planes are zero before anything
+    crosses the pod axis). ``rel`` and ``alive`` ride through
+    untouched; ``alive=None`` returns ``know`` unchanged (the
+    non-elastic structural fixed point)."""
+    if alive is None:
+        return know
+    a = jnp.asarray(alive, bool)
+
+    def rows(x):
+        m = jnp.reshape(a, (-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, jnp.zeros_like(x))
+
+    return know._replace(
+        tg=tree_map(rows, know.tg),
+        rg=tree_map(rows, know.rg),
+        tsum=jnp.where(a, know.tsum, 0.0),
+        rsum=jnp.where(a, know.rsum, 0.0),
+        sk=None if know.sk is None else rows(know.sk))
+
+
+def kill_agents(state: TrainState, dead) -> TrainState:
+    """Host-side elastic transition: mark ``dead`` ((A,) bool) agents
+    as gone. Their partial share window is zeroed — a half-window must
+    never leak into a later share step — while their params/optimizer
+    rows freeze in place and ``Knowledge.rel`` holds its last live
+    estimate (the estimator's alive-gated EMA keeps it frozen from
+    here). Checkpoint the state *before* killing to splice the agent
+    back in later (``revive_agents``)."""
+    know = state.know
+    if know.alive is None:
+        raise ValueError(
+            "kill_agents needs an elastic TrainState — build the spec "
+            "with GroupSpec(elastic=True) so Knowledge.alive exists")
+    alive = know.alive & ~jnp.asarray(dead, bool)
+    return state._replace(
+        know=mask_knowledge(know, alive)._replace(alive=alive))
+
+
+def revive_agents(state: TrainState, mask,
+                  restore: Optional[TrainState] = None) -> TrainState:
+    """Flip ``mask`` ((A,) bool) agents back alive. Their window rows
+    are (re)zeroed — a revival starts from an empty window, never a
+    stale one — and with ``restore`` (a checkpointed ``TrainState``)
+    the revived agents' params/optimizer rows splice back from the
+    checkpoint while every survivor's row is untouched."""
+    know = state.know
+    if know.alive is None:
+        raise ValueError(
+            "revive_agents needs an elastic TrainState — build the "
+            "spec with GroupSpec(elastic=True) so Knowledge.alive "
+            "exists")
+    m = jnp.asarray(mask, bool)
+    know = mask_knowledge(know, ~m)._replace(alive=know.alive | m)
+    params, opt_state = state.params, state.opt_state
+    if restore is not None:
+        params = _select_rows(m, restore.params, params)
+        opt_state = _select_rows(m, restore.opt_state, opt_state)
+    return state._replace(params=params, opt_state=opt_state,
+                          know=know)
+
+
 def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                           opt: Optimizer,
                           relevance: Optional[jnp.ndarray] = None,
@@ -288,6 +380,9 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
             "exchange")
     learn_rel = exchange.learns
     sketch_dim = exchange.sketch_dim
+    # elastic membership is a *static* build fact: non-elastic specs
+    # trace exactly the historical program (no alive ops anywhere)
+    elastic = bool(getattr(spec, "elastic", False))
 
     vopt = jax.vmap(opt.update, in_axes=(0, 0, 0, None))
 
@@ -296,23 +391,54 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
         losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(
             state.params, batch)
         know = state.know
+        alive = know.alive if elastic else None
+        if elastic and alive is None:
+            raise ValueError(
+                "GroupSpec.elastic=True but Knowledge.alive is None — "
+                "init the state through init_train_state / "
+                "init_knowledge(..., alive=...) so the mask exists")
 
         warmup = step < spec.threshold
         is_share = jnp.logical_not(warmup) & (step % spec.minibatch == 0)
 
         def warmup_branch(_):
             p2, o2 = vopt(grads, state.opt_state, state.params, step)
+            if elastic:
+                p2 = _select_rows(alive, p2, state.params)
+                o2 = _select_rows(alive, o2, state.opt_state)
             return p2, o2, know
 
         def sharing_branch(_):
             # accumulate this epoch's piece into the local window
             kdt = jnp.dtype(spec.knowledge_dtype)
             T_t = training_experience(step, spec.t_weighting)
-            tg = tree_map(lambda a, g: a + (T_t * g.astype(jnp.float32)
-                                            ).astype(kdt),
-                          know.tg, grads)
-            rg = tree_map(lambda a, g: a + g.astype(kdt),
-                          know.rg, grads)
+            if elastic:
+                # dead agents' gradients are garbage (their data still
+                # flows): hold their rows instead of accumulating
+                def row_gate(x):
+                    return jnp.reshape(alive,
+                                       (-1,) + (1,) * (x.ndim - 1))
+                tg = tree_map(
+                    lambda a, g: jnp.where(
+                        row_gate(a),
+                        a + (T_t * g.astype(jnp.float32)).astype(kdt),
+                        a),
+                    know.tg, grads)
+                rg = tree_map(
+                    lambda a, g: jnp.where(row_gate(a),
+                                           a + g.astype(kdt), a),
+                    know.rg, grads)
+                tsum = know.tsum + jnp.where(alive, T_t, 0.0)
+                rsum = know.rsum + jnp.where(alive, 1.0, 0.0)
+            else:
+                tg = tree_map(
+                    lambda a, g: a + (T_t * g.astype(jnp.float32)
+                                      ).astype(kdt),
+                    know.tg, grads)
+                rg = tree_map(lambda a, g: a + g.astype(kdt),
+                              know.rg, grads)
+                tsum = know.tsum + T_t
+                rsum = know.rsum + 1.0
             sk = know.sk
             if sketch_dim > 0:
                 # carry the window sketch: one streaming projection of
@@ -322,10 +448,12 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                 # ((step + mb − 1) // mb), so at share time sk IS the
                 # sketch of rg — nothing parameter-sized is re-read.
                 rnd = (step + spec.minibatch - 1) // spec.minibatch
-                sk = know.sk + exchange.sketch_step(grads, rnd)
-            k2 = Knowledge(tg=tg, tsum=know.tsum + T_t,
-                           rg=rg, rsum=know.rsum + 1.0, rel=know.rel,
-                           sk=sk)
+                contrib = exchange.sketch_step(grads, rnd)
+                if elastic:
+                    contrib = jnp.where(alive[:, None], contrib, 0.0)
+                sk = know.sk + contrib
+            k2 = Knowledge(tg=tg, tsum=tsum, rg=rg, rsum=rsum,
+                           rel=know.rel, sk=sk, alive=know.alive)
 
             def do_share(_):
                 # window-accumulated grads are already a temporal
@@ -336,12 +464,17 @@ def make_group_train_step(cfg: ArchConfig, spec: GroupSpec,
                 # eq. 4.
                 rel = exchange.observe(
                     k2.rel, grads=k2.rg, sketch=k2.sk,
-                    rnd=(step + spec.minibatch - 1) // spec.minibatch)
-                gbar = exchange.combine(k2, rel, step)
+                    rnd=(step + spec.minibatch - 1) // spec.minibatch,
+                    alive=alive)
+                gbar = exchange.combine(k2, rel, step, alive=alive)
                 p2, o2 = vopt(gbar, state.opt_state, state.params, step)
+                if elastic:
+                    p2 = _select_rows(alive, p2, state.params)
+                    o2 = _select_rows(alive, o2, state.opt_state)
                 return p2, o2, init_knowledge(state.params, kdt,
                                               rel=rel,
-                                              sketch_dim=sketch_dim)
+                                              sketch_dim=sketch_dim,
+                                              alive=know.alive)
 
             def hold(_):
                 return state.params, state.opt_state, k2

@@ -321,7 +321,7 @@ def cross_pod_mask(topo: Topology, layout: PodLayout) -> np.ndarray:
 # ---------------------------------------------------------------------
 # dynamic gossip (time-varying random_k)
 # ---------------------------------------------------------------------
-def sample_gossip(key, n: int, k: int) -> jnp.ndarray:
+def sample_gossip(key, n: int, k: int, alive=None) -> jnp.ndarray:
     """Jit-traceable k-regular gossip table: for every destination,
     edge slot 0 is the self-loop and slots 1..k-1 are k−1 distinct
     uniformly-drawn other agents. Returns an (n, k) int32 ``nbr``
@@ -331,11 +331,21 @@ def sample_gossip(key, n: int, k: int) -> jnp.ndarray:
     with the diagonal pushed past every real value — O(n² log n)
     scalars, negligible next to the delay line, and fully traceable so
     the table can be resampled *inside* the scanned epoch loop.
+
+    ``alive`` ((n,) bool, optional) demotes dead sources below every
+    live candidate (and below the diagonal), so a dead agent is only
+    ever drawn once fewer than k−1 live others exist; those residual
+    edges carry nothing because the send gate also ANDs in ``alive``.
+    ``alive=None`` is byte-for-byte the historical sampler.
     """
     if not 1 <= k <= n:
         raise ValueError(f"sample_gossip needs 1 <= k <= n, got k={k}")
     u = jax.random.uniform(key, (n, n))
     u = u + 2.0 * jnp.eye(n)            # self never among the draws
+    if alive is not None:
+        # dead columns land in (3, 4): past live non-self (0, 1) and
+        # past the live diagonal (2, 3)
+        u = u + 3.0 * (~jnp.asarray(alive, bool)).astype(u.dtype)[None, :]
     order = jnp.argsort(u, axis=1).astype(jnp.int32)   # (n, n)
     self_col = jnp.arange(n, dtype=jnp.int32)[:, None]
     return jnp.concatenate([self_col, order[:, :k - 1]], axis=1)
@@ -417,18 +427,20 @@ class DynamicTopology(NamedTuple):
                 dense_relevance=jnp.asarray(r, jnp.float32))
         return out
 
-    def round_table(self, epoch) -> jnp.ndarray:
+    def round_table(self, epoch, alive=None) -> jnp.ndarray:
         """The (traced) gossip table of ``epoch``'s resample round:
         ``sample_gossip`` keyed by
         ``fold_in(PRNGKey(seed), epoch // resample_every)`` —
         deterministic in ``(seed, epoch)`` and constant within a
-        round."""
+        round. ``alive`` excludes dead sources from the draw (elastic
+        membership); it does not enter the key, so a round's table is
+        still a pure function of ``(seed, round, alive)``."""
         n, k = self.base.nbr.shape
         rnd = jnp.asarray(epoch, jnp.int32) // self.resample_every
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), rnd)
-        return sample_gossip(key, n, k)
+        return sample_gossip(key, n, k, alive)
 
-    def refresh_table(self, epoch, nbr) -> jnp.ndarray:
+    def refresh_table(self, epoch, nbr, alive=None) -> jnp.ndarray:
         """Carried-table refresh for scanned loops: resample only at
         round boundaries (``epoch % resample_every == 0``), otherwise
         keep ``nbr``. Equivalent to ``round_table(epoch)`` when
@@ -442,7 +454,7 @@ class DynamicTopology(NamedTuple):
                     % self.resample_every) == 0
         return jax.lax.cond(
             boundary,
-            lambda _: self.round_table(epoch),
+            lambda _: self.round_table(epoch, alive),
             lambda _: jnp.asarray(nbr, jnp.int32),
             None)
 
@@ -465,14 +477,15 @@ class DynamicTopology(NamedTuple):
             rel = jnp.ones((n, k), jnp.float32)
         return Topology(nbr=nbr, mask=mask, delay=delay, relevance=rel)
 
-    def at_epoch(self, epoch) -> Topology:
+    def at_epoch(self, epoch, alive=None) -> Topology:
         """The communication graph in force at ``epoch``. With
         ``resample_every <= 0`` this is the static base — the exact
         object, so the static-limit equivalence is structural, not
-        just numerical."""
+        just numerical. ``alive`` only shapes the resampled draw; the
+        static base is masked downstream by the send/combine gates."""
         if self.resample_every <= 0:
             return self.base
-        return self.with_table(self.round_table(epoch))
+        return self.with_table(self.round_table(epoch, alive))
 
 
 # ---------------------------------------------------------------------

@@ -166,7 +166,25 @@ def main(argv=None):
                         "device_count=N) and runs the pod-dispatched "
                         "combine collectives; 'cpu' with --pods runs "
                         "the same decomposition without collectives")
-    p.add_argument("--ckpt", default=None)
+    p.add_argument("--elastic", action="store_true",
+                   help="elastic group membership: carry a per-agent "
+                        "alive mask through the exchange so agents "
+                        "can be killed/revived between steps without "
+                        "perturbing survivors (see docs/exchange.md, "
+                        "'Membership semantics')")
+    p.add_argument("--ckpt", default=None,
+                   help="save final params to this .npz")
+    p.add_argument("--ckpt-full", default=None,
+                   help="save the FULL TrainState — params, optimiser "
+                        "state, and the exchange window (Knowledge "
+                        "incl. sketches and learned relevance) — so a "
+                        "preempted run rejoins mid-stream via "
+                        "--restore instead of resetting the group")
+    p.add_argument("--restore", default=None,
+                   help="restore a --ckpt-full TrainState before "
+                        "training (leaves missing from older "
+                        "checkpoints, e.g. the elastic alive mask, "
+                        "keep their freshly initialised values)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -192,7 +210,8 @@ def main(argv=None):
         spec_kw[field] = value
     spec = GroupSpec(n_agents=args.agents, threshold=args.threshold,
                      minibatch=args.minibatch,
-                     knowledge_mode="streaming", **spec_kw)
+                     knowledge_mode="streaming", elastic=args.elastic,
+                     **spec_kw)
     shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
     opt = optim.adamw(args.lr)
     stream = StreamSpec(seed=args.seed)
@@ -221,6 +240,11 @@ def main(argv=None):
         exchange = build_exchange(spec, mesh, kind="streaming")
         state = init_train_state(cfg, spec, opt, key,
                                  exchange=exchange)
+        if args.restore:
+            from repro.checkpoint import restore
+            state = restore(args.restore, state, strict=False)
+            print(f"restored full TrainState from {args.restore} "
+                  f"(step {int(state.step)})")
         if mesh is not None:
             from repro.launch.shardings import agent_sharded_state
             state = agent_sharded_state(state, mesh, spec.pod_axis)
@@ -244,6 +268,9 @@ def main(argv=None):
         if args.ckpt:
             save(args.ckpt, state.params, step=args.steps)
             print(f"saved params to {args.ckpt}")
+        if args.ckpt_full:
+            save(args.ckpt_full, state, step=int(state.step))
+            print(f"saved full TrainState to {args.ckpt_full}")
 
 
 if __name__ == "__main__":

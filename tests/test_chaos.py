@@ -1,0 +1,528 @@
+"""Chaos lane (ISSUE 7): elastic membership under a seeded fault
+injector, in both trainers.
+
+The load-bearing oracles are *survivor-restriction* arguments: when an
+agent dies before anything it sent could reach a survivor, the
+surviving group's trajectory must be **bitwise** what it would have
+been had the corpse never participated — checked both against a
+dead-from-birth run of the same group and against a genuinely smaller
+group containing only the survivors. On top of that: dead agents are
+frozen in amber and go dark on the wire, revival replays nothing
+stale (delay-line scrubbing), a checkpoint-restored agent rejoins
+without perturbing any survivor's next update, and a dead pod leader
+carries nothing across the pod axis. Long schedules are
+``@pytest.mark.slow``; the injector itself is pure seeded numpy, so
+every schedule here replays identically on CI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.checkpoint import restore, save
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+from repro.core import topology as T
+from repro.core.chaos import chaos_schedule, membership_events
+from repro.core.pod_dispatch import make_pod_dispatch
+from repro.core.sharded_ddal import Knowledge, _combine_topo, mask_knowledge
+
+
+# ----------------------------------------------------------------------
+# toy group (same quadratic agent as test_core_ddal)
+# ----------------------------------------------------------------------
+def _toy_ddal(spec, delay=None):
+    def gen_grads(state, key):
+        del key
+        g = {"w": state["w"] - state["target"]}
+        return g, {"w": state["w"]}, state
+
+    def apply_grads(state, g):
+        return {"w": state["w"] - 0.5 * g["w"],
+                "target": state["target"]}
+
+    def params_of(state):
+        return {"w": state["w"]}
+
+    return DDAL(spec, gen_grads, apply_grads, params_of, delay=delay)
+
+
+def _toy_states(n):
+    return {"w": jnp.zeros((n,)),
+            "target": jnp.arange(n, dtype=jnp.float32)}
+
+
+def _run(ddal, gs, epochs, start=0, events=None):
+    """Drive epoch_step; ``events`` maps epoch -> (kill, revive) masks
+    applied *before* that epoch runs."""
+    step = jax.jit(ddal.epoch_step)
+    n = ddal.spec.n_agents
+    for e in range(start, start + epochs):
+        if events and e in events:
+            kill, revive = events[e]
+            if kill is not None and kill.any():
+                gs = ddal.kill(gs, jnp.asarray(kill))
+            if revive is not None and revive.any():
+                gs = ddal.revive(gs, jnp.asarray(revive))
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+    return gs
+
+
+# ----------------------------------------------------------------------
+# the fault injector is deterministic and bounded
+# ----------------------------------------------------------------------
+def test_chaos_schedule_is_deterministic():
+    a = chaos_schedule(3, 8, 50, kill_prob=0.2, revive_after=4)
+    b = chaos_schedule(3, 8, 50, kill_prob=0.2, revive_after=4)
+    assert np.array_equal(a, b)
+    c = chaos_schedule(4, 8, 50, kill_prob=0.2, revive_after=4)
+    assert not np.array_equal(a, c)
+    assert a.shape == (50, 8) and a.dtype == bool
+    assert a[0].all()                      # epoch 0 all-alive
+
+
+def test_chaos_schedule_floor_and_exact_downtime():
+    a = chaos_schedule(7, 4, 200, kill_prob=0.5, revive_after=3,
+                       min_alive=2)
+    assert (a.sum(axis=1) >= 2).all()      # never below the floor
+    assert (~a).any()                      # ...but faults do happen
+    # every outage is a whole number of revive_after windows (an
+    # agent can be re-killed the very epoch it comes back, merging
+    # adjacent outages — but never a partial window)
+    for i in range(4):
+        col = a[:, i].astype(np.int8)
+        starts = np.flatnonzero(np.diff(col) == -1) + 1
+        ends = np.flatnonzero(np.diff(col) == 1) + 1
+        for s, e in zip(starts, ends):
+            assert (e - s) % 3 == 0 and e > s
+
+
+def test_membership_events_reconstruct_schedule():
+    a = chaos_schedule(11, 6, 60, kill_prob=0.3, revive_after=2)
+    cur = np.ones(6, bool)
+    rebuilt = np.ones_like(a)
+    ev = dict((e, (k, r)) for e, k, r in membership_events(a))
+    for e in range(1, 60):
+        if e in ev:
+            kill, revive = ev[e]
+            assert not (kill & revive).any()
+            cur = (cur & ~kill) | revive
+        rebuilt[e] = cur
+    assert np.array_equal(rebuilt, a)
+
+
+# ----------------------------------------------------------------------
+# survivor-restriction oracles (buffer trainer)
+# ----------------------------------------------------------------------
+def test_warmup_kill_matches_survivor_only_group():
+    """Agents killed before their first send never existed: the
+    survivors' full trajectory is bitwise a 2-agent group's."""
+    n, surv = 4, np.asarray([0, 1])
+    big = _toy_ddal(GroupSpec(n_agents=n, threshold=3, minibatch=2,
+                              m_pieces=6, elastic=True))
+    small = _toy_ddal(GroupSpec(n_agents=2, threshold=3, minibatch=2,
+                                m_pieces=6))
+    kill = np.asarray([False, False, True, True])
+    gs = _run(big, big.init(_toy_states(n)), 14,
+              events={3: (kill, None)})
+    gss = _run(small, small.init(_toy_states(2)), 14)
+    np.testing.assert_array_equal(
+        np.asarray(gs.agent_states["w"])[surv],
+        np.asarray(gss.agent_states["w"]))
+    # and the dead stayed frozen at their last warmup value
+    np.testing.assert_array_equal(
+        np.asarray(gs.agent_states["w"])[2:],
+        np.arange(2, 4) * (1 - 0.5 ** 3))
+
+
+@pytest.mark.parametrize("topology,kw", [
+    ("full", {}),
+    ("ring", {}),
+    ("random_k", {"degree": 2}),
+])
+def test_warmup_kill_matches_dead_from_birth(topology, kw):
+    """Same-shape restriction oracle, any graph: killing during
+    warmup ≡ the agent was dead from epoch 0."""
+    spec = GroupSpec(n_agents=5, threshold=2, minibatch=1, m_pieces=4,
+                     elastic=True, topology=topology, **kw)
+    ddal = _toy_ddal(spec)
+    kill = np.asarray([False, False, True, False, False])
+    g1 = _run(ddal, ddal.init(_toy_states(5)), 12,
+              events={2: (kill, None)})
+    g2 = _run(ddal, ddal.init(_toy_states(5)), 12,
+              events={0: (kill, None)})
+    m = ~kill
+    np.testing.assert_array_equal(
+        np.asarray(g1.agent_states["w"])[m],
+        np.asarray(g2.agent_states["w"])[m])
+    np.testing.assert_array_equal(np.asarray(g1.stores.T)[m],
+                                  np.asarray(g2.stores.T)[m])
+
+
+def test_dead_agent_is_frozen_and_dark():
+    """Mid-sharing kill: the corpse's params freeze, its store is
+    scrubbed, and the wire goes dark — no plane in flight to or from
+    it, no future delivery lands in its ring."""
+    spec = GroupSpec(n_agents=3, threshold=0, minibatch=1, m_pieces=4,
+                     elastic=True)
+    ddal = _toy_ddal(spec)
+    gs = _run(ddal, ddal.init(_toy_states(3)), 4)
+    dead = np.asarray([False, True, False])
+    gs = ddal.kill(gs, jnp.asarray(dead))
+    assert not bool(np.asarray(gs.stores.valid[1]).any())
+    # flight rows touching agent 1 (as dst, or as src via nbr) cleared
+    nbr = np.asarray(gs.nbr)
+    valid = np.asarray(gs.flight.valid)
+    assert not valid[1].any()
+    assert not valid[nbr == 1].any()
+    w_dead = float(gs.agent_states["w"][1])
+    gs = _run(ddal, gs, 5, start=4)
+    assert float(gs.agent_states["w"][1]) == w_dead
+    assert not bool(np.asarray(gs.stores.valid[1]).any())
+    # survivors kept exchanging with each other
+    assert bool(np.asarray(gs.stores.valid[0]).any())
+
+
+def test_revival_replays_nothing_stale():
+    """With per-edge delay d, planes sent before the death must not
+    surface after revival: every piece in the revived ring was sent at
+    an epoch >= the revival epoch (T metadata is the send epoch)."""
+    n, d = 3, 3
+    delay = jnp.full((n, n), d, jnp.int32)
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1, m_pieces=8,
+                     elastic=True, t_weighting="epochs")
+    ddal = _toy_ddal(spec, delay=delay)
+    dead = np.asarray([False, True, False])
+    e_kill, e_rev = 5, 7
+    gs = _run(ddal, ddal.init(_toy_states(n)), 12,
+              events={e_kill: (dead, None), e_rev: (None, dead)})
+    Tmeta = np.asarray(gs.stores.T[1])
+    valid = np.asarray(gs.stores.valid[1])
+    assert valid.any()                     # it did rejoin the stream
+    # t_weighting="epochs" stamps T = max(send_epoch, 1); anything
+    # sent pre-kill (epoch < 5) still riding the d=3 delay line at
+    # revival would surface as T < 7
+    assert (Tmeta[valid] >= e_rev).all()
+
+
+def test_checkpoint_rejoin_does_not_perturb_survivors():
+    """The acceptance gate: a killed agent restored from its
+    exchange-state checkpoint rejoins mid-stream without perturbing
+    any survivor's next update (delay >= 1, so its fresh planes only
+    surface later), and its own rows come back bitwise from the
+    checkpoint."""
+    n = 3
+    delay = jnp.ones((n, n), jnp.int32)
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1, m_pieces=8,
+                     elastic=True)
+    ddal = _toy_ddal(spec, delay=delay)
+    dead = np.asarray([False, True, False])
+    surv = ~dead
+
+    gs = _run(ddal, ddal.init(_toy_states(n)), 4)
+    import tempfile
+    import os
+    with tempfile.TemporaryDirectory() as td:
+        ckpt_path = os.path.join(td, "group.npz")
+        save(ckpt_path, gs, step=4)        # full exchange state
+        gs = ddal.kill(gs, jnp.asarray(dead))
+        gs = _run(ddal, gs, 3, start=4)
+
+        ckpt = restore(ckpt_path, jax.eval_shape(lambda: gs))
+        rejoined = ddal.revive(gs, jnp.asarray(dead), restore=ckpt)
+        stayed = gs                         # control: agent stays dead
+
+        # the revived rows are bitwise the checkpointed ones
+        np.testing.assert_array_equal(
+            np.asarray(rejoined.agent_states["w"])[dead],
+            np.asarray(ckpt.agent_states["w"])[dead])
+        np.testing.assert_array_equal(
+            np.asarray(rejoined.stores.T)[dead],
+            np.asarray(ckpt.stores.T)[dead])
+        # ...and no survivor row moved at all
+        for a, b in [(rejoined.agent_states, stayed.agent_states),
+                     (rejoined.stores, stayed.stores)]:
+            jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+                np.asarray(x)[surv], np.asarray(y)[surv]), a, b)
+
+        # survivors' next update is identical whether or not the
+        # agent rejoined (its first post-revive plane is still in
+        # flight behind the 1-epoch delay)
+        step = jax.jit(ddal.epoch_step)
+        keys = jax.random.split(jax.random.PRNGKey(7), n)
+        g_re, _ = step(rejoined, keys)
+        g_st, _ = step(stayed, keys)
+        np.testing.assert_array_equal(
+            np.asarray(g_re.agent_states["w"])[surv],
+            np.asarray(g_st.agent_states["w"])[surv])
+
+
+def test_injector_driven_run_keeps_survivor_invariants():
+    """A full chaos_schedule drives kill/revive through a real run:
+    whoever is dead at epoch e is bitwise-frozen across e, and the
+    group's params stay finite throughout."""
+    n, epochs = 6, 24
+    sched = chaos_schedule(13, n, epochs, kill_prob=0.25,
+                           revive_after=3, min_alive=2)
+    events = dict((e, (k, r)) for e, k, r in membership_events(sched))
+    spec = GroupSpec(n_agents=n, threshold=4, minibatch=2, m_pieces=6,
+                     elastic=True)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(n))
+    step = jax.jit(ddal.epoch_step)
+    for e in range(epochs):
+        if e in events:
+            kill, revive = events[e]
+            if kill.any():
+                gs = ddal.kill(gs, jnp.asarray(kill))
+            if revive.any():
+                gs = ddal.revive(gs, jnp.asarray(revive))
+        before = np.asarray(gs.agent_states["w"]).copy()
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+        after = np.asarray(gs.agent_states["w"])
+        dead_now = ~sched[e]
+        np.testing.assert_array_equal(after[dead_now],
+                                      before[dead_now])
+        assert np.isfinite(after).all()
+        assert np.array_equal(np.asarray(gs.alive), sched[e])
+
+
+# ----------------------------------------------------------------------
+# property suite (mirrored by the no-hypothesis conftest shim)
+# ----------------------------------------------------------------------
+@given(st.integers(2, 6), st.integers(0, 3),
+       st.sampled_from(["full", "ring"]))
+def test_property_all_alive_is_bitwise_current_path(n, threshold,
+                                                    topology):
+    """elastic=True with nobody ever dying traces to the same numbers
+    as the historical non-elastic program."""
+    kw = dict(n_agents=n, threshold=threshold, minibatch=2,
+              m_pieces=4, topology=topology)
+    d0 = _toy_ddal(GroupSpec(**kw))
+    d1 = _toy_ddal(GroupSpec(elastic=True, **kw))
+    g0 = _run(d0, d0.init(_toy_states(n)), 8)
+    g1 = _run(d1, d1.init(_toy_states(n)), 8)
+    np.testing.assert_array_equal(np.asarray(g0.agent_states["w"]),
+                                  np.asarray(g1.agent_states["w"]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), g0.stores, g1.stores)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
+def test_property_dead_agents_receive_no_deliveries(seed, n):
+    """However the group churns, no delivery ever lands in a dead
+    ring and a dead agent's plane is never in flight."""
+    rng = np.random.default_rng(seed)
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1, m_pieces=4,
+                     elastic=True)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(n))
+    step = jax.jit(ddal.epoch_step)
+    for e in range(6):
+        mask = rng.random(n) < 0.3
+        mask[int(rng.integers(n))] = False          # keep one alive
+        cur = np.asarray(gs.alive)
+        kill = cur & mask
+        revive = ~cur & (rng.random(n) < 0.3)
+        if kill.any():
+            gs = ddal.kill(gs, jnp.asarray(kill))
+        if revive.any():
+            gs = ddal.revive(gs, jnp.asarray(revive))
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+        dead = ~np.asarray(gs.alive)
+        # dead rings never gain a piece (kill scrubbed them to empty)
+        assert not np.asarray(gs.stores.valid)[dead].any()
+        # and nothing of theirs rides the delay lines
+        valid = np.asarray(gs.flight.valid)
+        nbr = np.asarray(gs.nbr)
+        assert not valid[dead].any()                 # as destination
+        assert not valid[dead[nbr]].any()            # as source
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6),
+       st.integers(1, 5))
+def test_property_dead_weight_in_eq4_is_exactly_zero(seed, n, p):
+    """Streaming eq. 4: a dead agent's numerator *and* denominator
+    contributions are exactly zero — survivors' rows are invariant to
+    arbitrary garbage in dead rows of the window."""
+    rng = np.random.default_rng(seed)
+    alive = rng.random(n) < 0.6
+    alive[int(rng.integers(n))] = True
+    topo = T.ring(n)
+    base_tg = rng.normal(size=(n, p)).astype(np.float32)
+    base_rg = rng.normal(size=(n, p)).astype(np.float32)
+    tsum = rng.uniform(1, 3, n).astype(np.float32)
+    rsum = rng.uniform(1, 3, n).astype(np.float32)
+
+    def build(fill):
+        tg = base_tg.copy()
+        rg = base_rg.copy()
+        ts, rs = tsum.copy(), rsum.copy()
+        tg[~alive] = fill
+        rg[~alive] = fill
+        ts[~alive] = fill
+        rs[~alive] = fill
+        return Knowledge(tg={"w": jnp.asarray(tg)},
+                         tsum=jnp.asarray(ts),
+                         rg={"w": jnp.asarray(rg)},
+                         rsum=jnp.asarray(rs))
+
+    a = jnp.asarray(alive)
+    g1 = _combine_topo(mask_knowledge(build(0.0), a), topo)
+    g2 = _combine_topo(mask_knowledge(build(1e6), a), topo)
+    np.testing.assert_array_equal(np.asarray(g1["w"])[alive],
+                                  np.asarray(g2["w"])[alive])
+    # and a fully-masked window combines to exactly zero
+    gz = _combine_topo(mask_knowledge(build(1.0), jnp.zeros(n, bool)),
+                       topo)
+    np.testing.assert_array_equal(np.asarray(gz["w"]),
+                                  np.zeros((n, p), np.float32))
+
+
+# ----------------------------------------------------------------------
+# streaming trainer
+# ----------------------------------------------------------------------
+def _streaming_rig(elastic, n=3, threshold=2, minibatch=2):
+    from repro import optim
+    from repro.configs import get_arch_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import init_train_state, make_group_train_step
+    from repro.data import StreamSpec, make_group_batch
+
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    opt = optim.sgd(0.1)
+    shape = ShapeConfig("chaos", 32, 2, "train")
+    spec = GroupSpec(n_agents=n, threshold=threshold,
+                     minibatch=minibatch, knowledge_mode="streaming",
+                     elastic=elastic)
+    state = init_train_state(cfg, spec, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_group_train_step(cfg, spec, opt))
+
+    def batch(i):
+        return make_group_batch(cfg, shape, StreamSpec(), n, i)
+
+    return state, step, batch
+
+
+def test_streaming_warmup_kill_matches_dead_from_birth():
+    """Streaming trainer restriction oracle: kill before the first
+    share ≡ dead from step 0, bitwise on every survivor row."""
+    from repro.core import kill_agents
+    n = 3
+    dead = jnp.asarray([False, False, True])
+    surv = np.asarray([True, True, False])
+    s1, step, batch = _streaming_rig(True, n=n)
+    s2 = kill_agents(s1, dead)                       # dead from birth
+    s1_killed_later = s1
+    for i in range(5):
+        if i == 1:                                   # still warmup
+            s1_killed_later = kill_agents(s1_killed_later, dead)
+        s1_killed_later, _ = step(s1_killed_later, batch(i))
+        s2, _ = step(s2, batch(i))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a)[surv], np.asarray(b)[surv]),
+        s1_killed_later.params, s2.params)
+
+
+@pytest.mark.slow
+def test_streaming_injector_schedule_freezes_dead():
+    """Injector-driven streaming run: dead rows are bitwise-frozen
+    across every step they are down, revived rows move again."""
+    from repro.core import kill_agents, revive_agents
+    n, steps = 3, 10
+    sched = chaos_schedule(5, n, steps, kill_prob=0.3, revive_after=2,
+                           min_alive=1)
+    events = dict((e, (k, r)) for e, k, r in membership_events(sched))
+    state, step, batch = _streaming_rig(True, n=n, threshold=1,
+                                        minibatch=2)
+    for i in range(steps):
+        if i in events:
+            kill, revive = events[i]
+            if kill.any():
+                state = kill_agents(state, jnp.asarray(kill))
+            if revive.any():
+                state = revive_agents(state, jnp.asarray(revive))
+        before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                              state.params)
+        state, m = step(state, batch(i))
+        dead_now = ~sched[i]
+        if dead_now.any():
+            jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a)[dead_now], np.asarray(b)[dead_now]),
+                state.params, before)
+        assert np.array_equal(np.asarray(state.know.alive), sched[i])
+
+
+# ----------------------------------------------------------------------
+# pod dispatch: a dead leader carries nothing across the pod axis
+# ----------------------------------------------------------------------
+def _pod_rig(rng, n=8, pod_size=4, p=6):
+    topo = T.hierarchical(n, pod_size)
+    lay = T.hierarchical_layout(n, pod_size)
+    know = Knowledge(
+        tg={"w": jnp.asarray(rng.normal(size=(n, p)), jnp.float32)},
+        tsum=jnp.asarray(rng.uniform(1, 3, n), jnp.float32),
+        rg={"w": jnp.asarray(rng.normal(size=(n, p)), jnp.float32)},
+        rsum=jnp.asarray(rng.uniform(1, 3, n), jnp.float32))
+    return topo, lay, know
+
+
+def test_pod_dead_leader_reference():
+    """Reference decomposition: with pod 1's leader dead, (a) the
+    dispatch matches the flat masked oracle on every live row, and
+    (b) pod 0's rows are invariant to garbage planted anywhere in
+    pod 1 — nothing of a leaderless pod crosses the pod axis."""
+    rng = np.random.default_rng(21)
+    topo, lay, know = _pod_rig(rng)
+    alive = np.ones(8, bool)
+    alive[4] = False                       # pod 1's leader
+    a = jnp.asarray(alive)
+    combine = make_pod_dispatch(topo, lay)
+    got = jax.jit(lambda k: combine(k, alive=a))(know)
+    ref = _combine_topo(mask_knowledge(know, a), topo)
+    np.testing.assert_array_equal(np.asarray(got["w"])[alive],
+                                  np.asarray(ref["w"])[alive])
+    # garbage-invariance across the dead leader
+    poisoned = know._replace(
+        tg={"w": know.tg["w"].at[4:].set(1e9)},
+        rg={"w": know.rg["w"].at[4:].set(-1e9)},
+        tsum=know.tsum.at[4:].set(1e9),
+        rsum=know.rsum.at[4:].set(1e9))
+    got_p = jax.jit(lambda k: combine(k, alive=a))(poisoned)
+    np.testing.assert_array_equal(np.asarray(got["w"])[:4],
+                                  np.asarray(got_p["w"])[:4])
+
+
+@pytest.mark.multi_device
+@pytest.mark.parametrize("dead", [
+    [],                  # control: all-alive elastic ≡ alive=None
+    [4],                 # pod 1's leader
+    [2],                 # a plain member
+    [0, 5],              # pod 0's leader + a pod-1 member
+])
+def test_pod_kill_matrix_on_mesh(multi_device, dead):
+    """Kill/revive matrix through the real shard_map collectives on a
+    (2, 4) pod mesh: every membership pattern matches the flat masked
+    oracle on live rows, and the all-alive control is bitwise the
+    mask-free path."""
+    from repro.launch.mesh import make_pod_mesh
+    rng = np.random.default_rng(22)
+    mesh = make_pod_mesh(2)
+    topo, lay, know = _pod_rig(rng, n=8, pod_size=4)
+    alive = np.ones(8, bool)
+    alive[dead] = False
+    a = jnp.asarray(alive)
+    combine = make_pod_dispatch(topo, lay, mesh=mesh)
+    got = jax.jit(lambda k: combine(k, alive=a))(know)
+    ref = _combine_topo(mask_knowledge(know, a), topo)
+    np.testing.assert_allclose(np.asarray(got["w"])[alive],
+                               np.asarray(ref["w"])[alive],
+                               rtol=1e-5, atol=1e-6)
+    if not dead:
+        plain = jax.jit(lambda k: combine(k))(know)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(plain["w"]))

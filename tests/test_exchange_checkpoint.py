@@ -1,0 +1,223 @@
+"""Checkpoint/restore of the *full* exchange state (ISSUE 7).
+
+``checkpoint/npz.py`` already round-trips arbitrary pytrees; what
+elastic membership adds is the requirement that the whole exchange —
+``Knowledge`` planes incl. ``sk`` sketches and the learned ``rel``,
+the ``SparseInFlight`` delay-line rings, the gossip table and the
+step counter — survives a kill/restore/continue boundary **bitwise**,
+so a preempted agent rejoins mid-stream at its last published version
+without resetting the group. Also pinned here: bf16 leaves through
+the f32 npz detour, non-strict restore of pre-elastic checkpoints,
+and the serving ``ParamStore``'s ``__step__`` version.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import npz, restore, save
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+
+
+def _toy_ddal(spec, delay=None):
+    def gen_grads(state, key):
+        del key
+        g = {"w": state["w"] - state["target"]}
+        return g, {"w": state["w"]}, state
+
+    def apply_grads(state, g):
+        return {"w": state["w"] - 0.5 * g["w"],
+                "target": state["target"]}
+
+    return DDAL(spec, gen_grads, apply_grads,
+                lambda s: {"w": s["w"]}, delay=delay)
+
+
+def _toy_states(n):
+    return {"w": jnp.zeros((n,)),
+            "target": jnp.arange(n, dtype=jnp.float32)}
+
+
+def _run(ddal, gs, epochs, start=0):
+    step = jax.jit(ddal.epoch_step)
+    for e in range(start, start + epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e),
+                                          ddal.spec.n_agents))
+    return gs
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+# ----------------------------------------------------------------------
+# buffer trainer: GroupState (stores + delay lines + gossip table)
+# ----------------------------------------------------------------------
+def test_groupstate_roundtrip_is_bitwise(tmp_path):
+    """Save mid-run, restore into an eval_shape template, continue:
+    the continued trajectory is bitwise the uninterrupted one —
+    delay-line rings, gossip table, stores, epoch and alive included."""
+    n = 4
+    delay = jnp.asarray(np.random.default_rng(0).integers(
+        0, 3, (n, n)), jnp.int32)
+    spec = GroupSpec(n_agents=n, threshold=2, minibatch=2, m_pieces=6,
+                     elastic=True, topology="random_k", degree=2,
+                     resample_every=3)
+    ddal = _toy_ddal(spec, delay=delay)
+    gs = _run(ddal, ddal.init(_toy_states(n)), 7)
+
+    path = os.path.join(tmp_path, "group.npz")
+    save(path, gs, step=7)
+    assert npz.restore_step(path) == 7
+
+    template = jax.eval_shape(lambda: gs)
+    back = restore(path, template)
+    _assert_trees_equal(back, gs)
+
+    # continuing from the restored state is bitwise the straight run
+    cont = _run(ddal, back, 6, start=7)
+    straight = _run(ddal, gs, 6, start=7)
+    _assert_trees_equal(cont, straight)
+
+
+def test_kill_restore_continue_boundary(tmp_path):
+    """The ISSUE's boundary: checkpoint, kill an agent, continue,
+    then splice the victim back from the checkpoint — its restored
+    rows (params, store rings, T/R metadata) are bitwise the saved
+    ones even though the group kept moving underneath."""
+    n = 3
+    spec = GroupSpec(n_agents=n, threshold=0, minibatch=1, m_pieces=8,
+                     elastic=True)
+    ddal = _toy_ddal(spec, delay=jnp.ones((n, n), jnp.int32))
+    gs = _run(ddal, ddal.init(_toy_states(n)), 5)
+    path = os.path.join(tmp_path, "pre_kill.npz")
+    save(path, gs, step=5)
+
+    dead = jnp.asarray([True, False, False])
+    gs = ddal.kill(gs, dead)
+    gs = _run(ddal, gs, 4, start=5)
+
+    ckpt = restore(path, jax.eval_shape(lambda: gs))
+    rejoined = ddal.revive(gs, dead, restore=ckpt)
+    d = np.asarray(dead)
+    np.testing.assert_array_equal(
+        np.asarray(rejoined.agent_states["w"])[d],
+        np.asarray(ckpt.agent_states["w"])[d])
+    for field in ("T", "R", "valid", "ptr"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rejoined.stores, field))[d],
+            np.asarray(getattr(ckpt.stores, field))[d])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a)[d], np.asarray(b)[d]),
+        rejoined.stores.grads, ckpt.stores.grads)
+    # and the group can keep training through the splice
+    out = _run(ddal, rejoined, 3, start=9)
+    assert np.isfinite(np.asarray(out.agent_states["w"])).all()
+
+
+# ----------------------------------------------------------------------
+# streaming trainer: TrainState (Knowledge incl. sk + rel + step)
+# ----------------------------------------------------------------------
+def test_streaming_trainstate_roundtrip_with_sketch_and_rel(tmp_path):
+    """Full streaming TrainState — window accumulators, the learned
+    relevance EMA, the gradient sketch and the step counter — is
+    bitwise across save/restore, and a restored run continues
+    bitwise."""
+    from repro import optim
+    from repro.configs import get_arch_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import init_train_state, make_group_train_step
+    from repro.data import StreamSpec, make_group_batch
+
+    cfg = get_arch_config("llama3.2-3b").reduced()
+    opt = optim.sgd(0.1)
+    shape = ShapeConfig("ckpt", 32, 2, "train")
+    spec = GroupSpec(n_agents=2, threshold=1, minibatch=2,
+                     knowledge_mode="streaming", elastic=True,
+                     relevance_mode="grad_cos",
+                     relevance_sketch_dim=16)
+    state = init_train_state(cfg, spec, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_group_train_step(cfg, spec, opt))
+
+    def batch(i):
+        return make_group_batch(cfg, shape, StreamSpec(), 2, i)
+
+    for i in range(3):
+        state, _ = step(state, batch(i))
+    assert state.know.sk is not None and state.know.rel is not None
+
+    path = os.path.join(tmp_path, "train.npz")
+    save(path, state, step=int(state.step))
+    back = restore(path, jax.eval_shape(lambda: state))
+    _assert_trees_equal(back, state)
+    assert npz.restore_step(path) == 3
+
+    s1, _ = step(state, batch(3))
+    s2, _ = step(back, batch(3))
+    _assert_trees_equal(s1, s2)
+
+
+def test_restore_non_strict_fills_missing_leaves(tmp_path):
+    """A pre-elastic checkpoint (no ``alive`` leaf) restores into an
+    elastic template with ``strict=False``: present leaves load,
+    missing ones keep the template's value; ``strict=True`` raises."""
+    saved = {"w": jnp.arange(4.0)}
+    path = os.path.join(tmp_path, "old.npz")
+    save(path, saved)
+    template = {"w": jnp.zeros((4,)), "alive": jnp.ones((4,), bool)}
+    with pytest.raises(KeyError, match="alive"):
+        restore(path, template)
+    got = restore(path, template, strict=False)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(got["alive"]),
+                                  np.ones(4, bool))
+
+
+def test_bf16_leaves_roundtrip_bitwise(tmp_path):
+    """bf16 exchange planes take the f32 detour inside npz (np.savez
+    can't serialise ml_dtypes) — lossless, bitwise back in bf16."""
+    rng = np.random.default_rng(3)
+    tree = {
+        "planes": jnp.asarray(rng.normal(size=(4, 33)),
+                              jnp.bfloat16),
+        "tsum": jnp.asarray(rng.uniform(1, 3, 4), jnp.float32),
+        "alive": jnp.asarray([True, False, True, True]),
+        "step": jnp.asarray(17, jnp.int32),
+    }
+    path = os.path.join(tmp_path, "bf16.npz")
+    save(path, tree, step=17)
+    back = restore(path, jax.eval_shape(lambda: tree))
+    assert back["planes"].dtype == jnp.bfloat16
+    assert back["alive"].dtype == bool
+    _assert_trees_equal(back, tree)
+
+
+# ----------------------------------------------------------------------
+# serving ParamStore version
+# ----------------------------------------------------------------------
+def test_param_store_checkpoint_carries_version(tmp_path):
+    """ParamStore.save stamps its publish version into ``__step__``;
+    load resumes at that version so serving hot-swap monotonicity
+    survives a restart."""
+    from repro.serving.group import ParamStore
+
+    planes = {"w": jnp.arange(6.0).reshape(2, 3)}
+    store = ParamStore(planes)
+    for v in range(3):
+        store.publish(jax.tree.map(lambda x: x + 1.0,
+                                   store.acquire()[0]))
+    assert store.version == 3
+    path = os.path.join(tmp_path, "store.npz")
+    store.save(path)
+    assert npz.restore_step(path) == 3
+
+    back = ParamStore.load(path, jax.eval_shape(lambda: planes))
+    assert back.version == 3
+    _assert_trees_equal(back.acquire()[0], store.acquire()[0])
