@@ -1,75 +1,395 @@
-"""eq. 4 weighted-average kernel roofline bench (beyond-paper table).
+"""eq. 4 fused share-step kernel gate + roofline bench.
 
-The kernel's value is HBM-traffic reduction: XLA's unfused form reads
-the accumulator m times (traffic ≈ (2m)·4N bytes fp32), the fused
-Pallas kernel reads G once and writes ḡ once (traffic ≈ (m+1)·4N).
-CPU wall-clock is NOT the metric (interpret mode runs Python) — we
-report the analytic v5e HBM roofline for both traffic models plus a
-correctness check, and CPU wall time of the XLA reference for context.
+The share step's value is HBM-traffic reduction: the historical
+multi-op path (``eq4_weights`` → ``tree_weighted_sum``) reads the
+fp32 plane stack and re-reads the accumulator per piece; the fused
+kernel (``repro.kernels.ddal_wavg``) streams the arrival-slot planes
+through VMEM exactly once, regenerates the eq. 4 weights in-kernel
+and emits (ḡ, Σw) directly — and the int8 block-quantized variant
+reads ~N bytes instead of 4N. This benchmark FAILS (non-zero exit)
+unless:
+
+1. **correctness** — the fused Pallas kernel (interpret mode off-TPU)
+   matches the multi-op oracle at fp32 and on quantized planes;
+2. **bitwise** — the fused *XLA* path (what CPU/GPU trainers compile)
+   is bit-identical to the historical multi-op path at
+   quantization-off, flat and tree-wise;
+3. **one-pass shape** — the fused entry's jaxpr contains exactly one
+   ``pallas_call`` (the whole share step is one kernel launch), and
+   the quantized XLA path's peak jaxpr intermediate stays far below a
+   full fp32 dequant of the plane stack (streaming dequant, never a
+   4-byte copy of G);
+4. **quantization accuracy** — |ḡ_int8 − ḡ_fp32|∞ ≤ ½·max(scale)
+   (the analytic bound: eq. 4 weights are a convex combination) and
+   relative L2 error ≤ 1e-2 at every supported block size;
+5. **bytes** — an int8 delay line allocates ≥ 3.5× fewer bytes than
+   fp32 (``jax.eval_shape``, no host memory), and
+   ``pod_dispatch.cross_pod_bytes`` reflects the same saving.
+
+A ``repro.roofline.Roofline`` record for the fused share step is
+built from the compiled dry-run artifact (``.cost_analysis()`` of the
+fused XLA path on this backend) plus the analytic v5e HBM model for
+the Pallas traffic — the interpret-only-validation gap, measured.
+
+Every run writes machine-readable ``BENCH_wavg_kernel.json`` next to
+this file (override with ``--json``) so the kernel's trajectory is
+tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_wavg_kernel.py \
+        [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.weighting import eq4_weights
+from repro.common.pytree import tree_weighted_sum
 from repro.kernels.ddal_wavg import ops, ref
 from repro.roofline.constants import HBM_BW
+from repro.roofline.report import Roofline
+
+_DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_wavg_kernel.json")
 
 SIZES = [(4, 1_000_000), (8, 10_000_000),
          (16, 10_000_000), (8, 100_000_000)]
 SMOKE_SIZES = [(4, 1_000_000), (8, 2_000_000)]
+Q_BLOCKS = (128, 512, 2048, 8192)      # multiples of 128 dividing 8192
+
+REL_L2_BOUND = 1e-2                    # pinned int8-vs-fp32 eq. 4 error
 
 
-def main(verbose: bool = True, smoke: bool = False):
+def _meta(m: int, seed: int = 0):
+    """(T, R, valid) with one invalid piece — the masked regime."""
+    kT, kR = jax.random.split(jax.random.PRNGKey(seed))
+    T = jnp.abs(jax.random.normal(kT, (m,))) + 0.1
+    R = jnp.abs(jax.random.normal(kR, (m,))) + 0.1
+    valid = (jnp.arange(m) != 1)
+    return T, R, valid
+
+
+def _legacy(G, T, R, valid):
+    """The historical multi-op share step, spelled at the call site."""
+    w = eq4_weights(T, R, valid)
+    return tree_weighted_sum(G, w), jnp.sum(w)
+
+
+# ---------------------------------------------------------------------
+# jaxpr accounting (shared idiom with bench_relevance_sketch)
+# ---------------------------------------------------------------------
+def _walk_jaxpr(jaxpr, on_eqn):
+    for eqn in jaxpr.eqns:
+        on_eqn(eqn)
+        for p in eqn.params.values():
+            _walk_params(p, on_eqn)
+
+
+def _walk_params(p, on_eqn):
+    if hasattr(p, "jaxpr"):                       # ClosedJaxpr
+        _walk_jaxpr(p.jaxpr, on_eqn)
+    elif hasattr(p, "eqns"):                      # raw Jaxpr
+        _walk_jaxpr(p, on_eqn)
+    elif isinstance(p, (tuple, list)):
+        for q in p:
+            _walk_params(q, on_eqn)
+
+
+def count_pallas_calls(fn, *args) -> int:
+    closed = jax.make_jaxpr(fn)(*args)
+    hits = []
+    _walk_jaxpr(closed.jaxpr,
+                lambda e: hits.append(e)
+                if "pallas" in e.primitive.name else None)
+    return len(hits)
+
+
+def peak_intermediate_bytes(fn, *args) -> int:
+    """Largest array any equation of ``fn``'s jaxpr produces —
+    recursing through nested jaxprs but not into Pallas bodies."""
+    closed = jax.make_jaxpr(fn)(*args)
+    peak = [0]
+
+    def aval_bytes(aval) -> int:
+        shape = getattr(aval, "shape", None)
+        dtype = getattr(aval, "dtype", None)
+        if shape is None or dtype is None:
+            return 0
+        return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+
+    def on_eqn(eqn):
+        for v in eqn.outvars:
+            peak[0] = max(peak[0], aval_bytes(v.aval))
+
+    _walk_jaxpr(closed.jaxpr, on_eqn)
+    return peak[0]
+
+
+# ---------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------
+def gate_correctness(m: int = 6, n: int = 262_144) -> dict:
+    """Fused Pallas (interpret off-TPU) vs the multi-op oracle."""
+    G = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
+    T, R, valid = _meta(m)
+    want_g, want_w = _legacy(G, T, R, valid)
+
+    got_g, got_w = ops.fused_wavg(G, T, R, valid, impl="pallas")
+    err_fp32 = float(jnp.max(jnp.abs(got_g - want_g)))
+    err_w = float(jnp.abs(got_w - want_w))
+
+    Q, S = ref.quantize_flat(G, 512)
+    oq_g, oq_w = ref.fused_wavg_q(Q, S, T, R, valid, 512)
+    kq_g, kq_w = ops.fused_wavg_q(Q, S, T, R, valid, 512,
+                                  impl="pallas")
+    err_q = float(jnp.max(jnp.abs(kq_g - oq_g)))
+    err_qw = float(jnp.abs(kq_w - oq_w))
+    tol = 2e-5
+    return {"pass": bool(max(err_fp32, err_q) <= tol
+                         and max(err_w, err_qw) <= 1e-6),
+            "tol": tol, "fp32_max_err": err_fp32,
+            "quant_kernel_vs_oracle_max_err": err_q,
+            "wsum_err": max(err_w, err_qw),
+            "detail": "fused Pallas kernel vs multi-op oracle, "
+                      "fp32 + int8 planes"}
+
+
+def gate_bitwise(m: int = 6, n: int = 262_144) -> dict:
+    """The fused XLA path (the compiled CPU/GPU share step) must be
+    bit-identical to the historical multi-op path at quant-off."""
+    G = jax.random.normal(jax.random.PRNGKey(1), (m, n), jnp.float32)
+    T, R, valid = _meta(m, seed=1)
+    want_g, want_w = _legacy(G, T, R, valid)
+    got_g, got_w = ops.fused_wavg(G, T, R, valid, impl="xla")
+    flat_ok = bool(jnp.all(got_g == want_g)) and bool(got_w == want_w)
+
+    tree = {"emb": G[:, :65_536].reshape(m, 512, 128),
+            "head": G[:, 65_536:65_543]}           # small-leaf path too
+    want_t, want_tw = _legacy(tree, T, R, valid)
+    got_t, got_tw = ops.tree_fused_wavg(tree, T, R, valid, impl="xla")
+    tree_ok = all(bool(jnp.all(a == b)) for a, b in
+                  zip(jax.tree.leaves(got_t), jax.tree.leaves(want_t)))
+    tree_ok = tree_ok and bool(got_tw == want_tw)
+    return {"pass": bool(flat_ok and tree_ok),
+            "flat_bitwise": flat_ok, "tree_bitwise": tree_ok,
+            "detail": "fused XLA vs eq4_weights + tree_weighted_sum"}
+
+
+def gate_one_pass(m: int = 8, n: int = 1_048_576) -> dict:
+    """Jaxpr shape: one kernel launch for the whole share step; the
+    quantized XLA path never materialises a fp32 copy of the stack."""
+    G = jnp.zeros((m, n), jnp.float32)
+    T, R, valid = _meta(m)
+    n_calls = count_pallas_calls(
+        lambda g, t, r, v: ops.fused_wavg(g, t, r, v, impl="pallas",
+                                          interpret=True),
+        G, T, R, valid)
+
+    qb = 512
+    Q, S = ref.quantize_flat(G, qb)
+    peak_q = peak_intermediate_bytes(
+        lambda q, s, t, r, v: ops.fused_wavg_q(q, s, t, r, v, qb,
+                                               impl="xla"),
+        Q, S, T, R, valid)
+    full_dequant = m * n * 4               # what a naive path builds
+    return {"pass": bool(n_calls == 1
+                         and peak_q <= 0.5 * full_dequant),
+            "pallas_calls": n_calls,
+            "xla_quant_peak_mb": peak_q / 2**20,
+            "full_dequant_mb": full_dequant / 2**20,
+            "detail": "1 pallas_call; streaming dequant peak < ½ of a "
+                      "full fp32 dequant"}
+
+
+def gate_quant_error(m: int = 8, n: int = 1_000_000) -> dict:
+    """int8 eq. 4 vs fp32 eq. 4, per supported block size: the
+    analytic ∞-bound (weights are convex, so error ≤ ½·max scale) and
+    the pinned relative-L2 tolerance."""
+    G = jax.random.normal(jax.random.PRNGKey(2), (m, n), jnp.float32)
+    T, R, valid = _meta(m, seed=2)
+    g32, _ = _legacy(G, T, R, valid)
+    ok = True
+    per_block = {}
+    for qb in Q_BLOCKS:
+        Q, S = ref.quantize_flat(G, qb)
+        gq, _ = ops.fused_wavg_q(Q, S, T, R, valid, qb, impl="xla")
+        inf_err = float(jnp.max(jnp.abs(gq - g32)))
+        inf_bound = float(jnp.max(S)) / 2.0 + 1e-7
+        rel = float(jnp.linalg.norm(gq - g32) / jnp.linalg.norm(g32))
+        per_block[qb] = {"inf_err": inf_err, "inf_bound": inf_bound,
+                         "rel_l2": rel}
+        ok &= inf_err <= inf_bound and rel <= REL_L2_BOUND
+    return {"pass": bool(ok), "rel_l2_bound": REL_L2_BOUND,
+            "per_block": per_block,
+            "detail": "|ḡ_q − ḡ|∞ ≤ ½·max(scale) and rel-L2 ≤ bound"}
+
+
+def gate_bytes(qb: int = 512) -> dict:
+    """Structure-level accounting: int8 delay line ≥ 3.5× lighter
+    (eval_shape — nothing allocated), and the analytic cross-pod
+    accounting agrees."""
+    from repro.core.knowledge import make_sparse_inflight
+    from repro.core.pod_dispatch import _edge_cost
+    from repro.core.topology import full
+
+    params_like = {"w": jax.ShapeDtypeStruct((1024, 256), jnp.float32),
+                   "b": jax.ShapeDtypeStruct((1024,), jnp.float32)}
+    topo = full(8)
+
+    def nbytes(tree) -> int:
+        return sum(int(np.prod(x.shape, dtype=np.int64))
+                   * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree))
+
+    fp = jax.eval_shape(
+        lambda: make_sparse_inflight(params_like, topo, 2))
+    q8 = jax.eval_shape(
+        lambda: make_sparse_inflight(params_like, topo, 2, qb))
+    # compare the payload planes (grads + scales); T/R/valid metadata
+    # is identical on both sides
+    fp_b = nbytes(fp.grads)
+    q8_b = nbytes(q8.grads) + nbytes(q8.scale)
+    ratio = fp_b / q8_b
+
+    n_params = 10_000_000
+    pod_ratio = (_edge_cost(n_params, 4)
+                 / _edge_cost(n_params, 4, quant_block=qb))
+    return {"pass": bool(ratio >= 3.5 and pod_ratio >= 3.5),
+            "delay_line_ratio": ratio, "cross_pod_ratio": pod_ratio,
+            "fp32_mb": fp_b / 2**20, "int8_mb": q8_b / 2**20,
+            "detail": "int8 planes ≥ 3.5× lighter, structure + "
+                      "analytic accounting"}
+
+
+# ---------------------------------------------------------------------
+# roofline from the compiled dry-run artifact
+# ---------------------------------------------------------------------
+def roofline_record(m: int = 8, n: int = 10_000_000) -> dict:
+    """Compile the fused XLA share step on this backend, pull the HLO
+    cost model, and fold it into a ``Roofline`` record alongside the
+    analytic v5e terms for the Pallas traffic model (which cannot be
+    compiled off-TPU — this record is how that gap stays measured)."""
+    G = jnp.zeros((m, n), jnp.float32)
+    T, R, valid = _meta(m)
+    fn = jax.jit(lambda g, t, r, v: ops.fused_wavg(g, t, r, v,
+                                                   impl="xla"))
+    compiled = fn.lower(G, T, R, valid).compile()
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):            # some backends
+        cost = cost[0] if cost else {}
+    # useful FLOPs of the share step: m multiply-adds per element
+    mflops = 2.0 * m * n
+    roof = Roofline(
+        arch="ddal_wavg_fused", shape=f"m{m}_n{n}",
+        mesh=jax.default_backend(), chips=1,
+        hlo_flops=float(cost.get("flops", 0.0) or 0.0),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0) or 0.0),
+        coll_bytes=0.0, coll_breakdown={},        # single-device op
+        model_flops=mflops,
+    )
+    bytes_pallas_fp32 = 4.0 * n * (m + 1) + 12.0 * m
+    bytes_pallas_q = (1.0 * n * m                  # int8 planes
+                      + 4.0 * (n // 512) * m       # scales @ qb=512
+                      + 4.0 * n + 12.0 * m)
+    rec = roof.to_dict()
+    rec["analytic_v5e"] = {
+        "fused_fp32_us": bytes_pallas_fp32 / HBM_BW * 1e6,
+        "fused_int8_us": bytes_pallas_q / HBM_BW * 1e6,
+        "unfused_fp32_us": 4.0 * n * 2 * m / HBM_BW * 1e6,
+    }
+    return rec
+
+
+# ---------------------------------------------------------------------
+# sweep table (analytic v5e + CPU wall of the compiled fused path)
+# ---------------------------------------------------------------------
+def sweep_rows(smoke: bool) -> list:
     rows = []
     for m, n_params in (SMOKE_SIZES if smoke else SIZES):
-        key = jax.random.PRNGKey(0)
-        # correctness at a reduced size (same tiling)
-        n_small = 262_144
-        G = jax.random.normal(key, (m, n_small), jnp.float32)
-        w = jax.random.uniform(key, (m,))
-        got = ops.wavg(G, w, interpret=True)
-        want = ref.wavg(G, w)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=1e-5, atol=1e-5)
-
-        # CPU wall time of the XLA reference at full size
+        T, R, valid = _meta(m)
         Gf = jnp.zeros((m, n_params), jnp.float32)
-        rfn = jax.jit(ref.wavg)
-        rfn(Gf, w).block_until_ready()
+        fn = jax.jit(lambda g, t, r, v: ops.fused_wavg(
+            g, t, r, v, impl="xla"))
+        jax.block_until_ready(fn(Gf, T, R, valid))
         t0 = time.time()
-        rfn(Gf, w).block_until_ready()
+        jax.block_until_ready(fn(Gf, T, R, valid))
         cpu_s = time.time() - t0
 
         bytes_fused = 4.0 * n_params * (m + 1)
+        bytes_fused_q = 1.0 * n_params * m + 4.0 * n_params
         bytes_unfused = 4.0 * n_params * 2 * m
         rows.append({
             "m": m, "n_params": n_params,
             "v5e_roofline_fused_us": bytes_fused / HBM_BW * 1e6,
+            "v5e_roofline_fused_int8_us":
+                bytes_fused_q / HBM_BW * 1e6,
             "v5e_roofline_unfused_us": bytes_unfused / HBM_BW * 1e6,
             "traffic_saving": bytes_unfused / bytes_fused,
-            "cpu_ref_ms": cpu_s * 1e3,
+            "traffic_saving_int8": bytes_unfused / bytes_fused_q,
+            "cpu_fused_ms": cpu_s * 1e3,
         })
-    if verbose:
-        print(f"{'m':>3} {'N':>12} {'fused µs':>10} {'unfused µs':>11} "
-              f"{'saving':>7} {'cpu-ref ms':>11}")
-        for r in rows:
-            print(f"{r['m']:3d} {r['n_params']:12,} "
-                  f"{r['v5e_roofline_fused_us']:10.1f} "
-                  f"{r['v5e_roofline_unfused_us']:11.1f} "
-                  f"{r['traffic_saving']:6.2f}x "
-                  f"{r['cpu_ref_ms']:11.2f}")
-        print("correctness: interpret-mode kernel == jnp oracle ✓")
     return rows
 
 
-if __name__ == "__main__":
+def main(argv=None, verbose: bool = True):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
                    help="CI fast path: reduced sizes only")
-    args = p.parse_args()
-    main(smoke=args.smoke)
+    p.add_argument("--json", default=_DEFAULT_JSON,
+                   help="machine-readable results path")
+    args = p.parse_args(argv)
+
+    gates = {
+        "correctness": gate_correctness(),
+        "bitwise": gate_bitwise(),
+        "one_pass": gate_one_pass(),
+        "quant_error": gate_quant_error(),
+        "bytes": gate_bytes(),
+    }
+    roof = roofline_record(*(SMOKE_SIZES[-1] if args.smoke
+                             else SIZES[1]))
+    rows = sweep_rows(args.smoke)
+
+    if verbose:
+        for name, g in gates.items():
+            print(f"gate {name}: {'PASS' if g['pass'] else 'FAIL'} "
+                  f"({ {k: v for k, v in g.items() if k != 'pass'} })")
+        print(f"\nroofline ({roof['arch']}, {roof['shape']}, backend "
+              f"{roof['mesh']}): hlo_bytes={roof['hlo_bytes']:.3g} "
+              f"dominant={roof['dominant']} "
+              f"analytic v5e fused fp32 "
+              f"{roof['analytic_v5e']['fused_fp32_us']:.1f}µs / int8 "
+              f"{roof['analytic_v5e']['fused_int8_us']:.1f}µs")
+        print(f"\n{'m':>3} {'N':>12} {'fused µs':>10} {'int8 µs':>9} "
+              f"{'unfused µs':>11} {'saving':>7} {'int8 sv':>8} "
+              f"{'cpu ms':>8}")
+        for r in rows:
+            print(f"{r['m']:3d} {r['n_params']:12,} "
+                  f"{r['v5e_roofline_fused_us']:10.1f} "
+                  f"{r['v5e_roofline_fused_int8_us']:9.1f} "
+                  f"{r['v5e_roofline_unfused_us']:11.1f} "
+                  f"{r['traffic_saving']:6.2f}x "
+                  f"{r['traffic_saving_int8']:7.2f}x "
+                  f"{r['cpu_fused_ms']:8.2f}")
+
+    payload = {"bench": "wavg_kernel",
+               "backend": jax.default_backend(),
+               "gates": gates, "roofline": roof, "rows": rows}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    if verbose:
+        print(f"\nwrote {args.json}")
+
+    if not all(g["pass"] for g in gates.values()):
+        raise SystemExit("wavg kernel gate FAILED")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

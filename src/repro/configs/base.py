@@ -254,6 +254,15 @@ class GroupSpec:
                                       # exclusion). False keeps every
                                       # trainer's jitted program
                                       # structurally unchanged.
+    knowledge_quant_block: int = 0    # >0: store/ship knowledge planes
+                                      # as int8 with one fp32 scale per
+                                      # this many flat elements (~4×
+                                      # lighter delay lines and
+                                      # cross-pod bytes). Must be a
+                                      # multiple of 128 dividing 8192
+                                      # (whole sublane row groups of
+                                      # the wavg kernel tile). 0 = fp32
+                                      # planes, bitwise-legacy.
 
     def __post_init__(self):
         # deferred imports: repro.core modules import this module for
@@ -348,3 +357,12 @@ class GroupSpec:
                     f"pod_axis must be a non-empty mesh axis name "
                     f"distinct from the intra-pod 'agent' axis, got "
                     f"{self.pod_axis!r}")
+        qb = self.knowledge_quant_block
+        if qb < 0:
+            raise ValueError(
+                f"knowledge_quant_block must be >= 0, got {qb}")
+        if qb > 0 and (qb % 128 != 0 or 8192 % qb != 0):
+            raise ValueError(
+                f"knowledge_quant_block must be a multiple of 128 "
+                f"dividing 8192 (one scale per whole sublane row group "
+                f"of the wavg kernel tile), got {qb}")

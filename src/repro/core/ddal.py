@@ -135,6 +135,8 @@ class DDAL:
         self.max_delay = exchange.max_delay
         self.use_wavg_kernel = use_wavg_kernel
         self.elastic = bool(getattr(spec, "elastic", False))
+        self.quant_block = int(getattr(spec, "knowledge_quant_block",
+                                       0) or 0)
 
     # ------------------------------------------------------------------
     def init(self, agent_states) -> GroupState:
@@ -142,10 +144,12 @@ class DDAL:
         n = self.spec.n_agents
         params0 = self.params_of(tree_map(lambda x: x[0], agent_states))
         stores = jax.vmap(lambda _: K.make_store(params0,
-                                                 self.spec.m_pieces))(
+                                                 self.spec.m_pieces,
+                                                 self.quant_block))(
             jnp.arange(n))
         flight = K.make_sparse_inflight(params0, self.static_topology,
-                                        self.max_delay)
+                                        self.max_delay,
+                                        self.quant_block)
         alive = jnp.ones((n,), bool) if self.elastic else None
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
@@ -187,7 +191,8 @@ class DDAL:
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
                              (n,))
         flight = K.sparse_send(gs.flight, topo, grads, T,
-                               epoch, sharing, alive)
+                               epoch, sharing, alive,
+                               quant_block=self.quant_block)
         # the delivery fast-path hint needs only static facts (mask,
         # delay, m % k) — valid whatever the traced nbr table says
         flight, stores = K.sparse_deliver(flight, gs.stores, epoch,
@@ -264,7 +269,9 @@ class DDAL:
             grads=tree_map(clear_rows, gs.stores.grads),
             T=clear_rows(gs.stores.T), R=clear_rows(gs.stores.R),
             valid=clear_rows(gs.stores.valid),
-            ptr=jnp.where(dead, 0, gs.stores.ptr))
+            ptr=jnp.where(dead, 0, gs.stores.ptr),
+            scale=(None if gs.stores.scale is None else
+                   tree_map(clear_rows, gs.stores.scale)))
         return gs._replace(stores=stores, flight=flight, alive=alive)
 
     def revive(self, gs: GroupState, mask,

@@ -64,21 +64,32 @@ def _edge_effective(topo, rel):
 
 
 @COMBINERS.register("flat",
-                    params={"r_weighting": ("r_weighting", str)})
+                    params={"r_weighting": ("r_weighting", str),
+                            "quant_block": ("knowledge_quant_block",
+                                            int)})
 def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
                        mesh=None, use_wavg_kernel=False) -> Combiner:
     """Streaming single-mesh combine. ``schedule=None`` marks the
     topology-free case (``full`` graph, no explicit object): the
     global-sum fast path when nothing weights the edges, the dense
-    eq. 4 matmul otherwise."""
+    eq. 4 matmul otherwise. ``knowledge_quant_block > 0`` pushes the
+    window's gradient planes through the int8 wire format before the
+    aggregation (``quantize_knowledge_roundtrip``); 0 traces the
+    historical program bit for bit."""
     del mesh, use_wavg_kernel
     from repro.core.sharded_ddal import (
         _combine,
         _combine_topo,
         mask_knowledge,
+        quantize_knowledge_roundtrip,
     )
     A = spec.n_agents
     learns = estimator.learns
+    qb = int(getattr(spec, "knowledge_quant_block", 0) or 0)
+
+    def gate(knowledge, alive):
+        return quantize_knowledge_roundtrip(
+            mask_knowledge(knowledge, alive), qb)
 
     if schedule is None:
         uniform = (dense_R is None and spec.r_weighting == "uniform"
@@ -88,26 +99,24 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
         if learns:
             def combine(knowledge, rel, step, alive=None):
                 del step
-                return _combine(mask_knowledge(knowledge, alive),
+                return _combine(gate(knowledge, alive),
                                 combine_relevance(R, rel),
                                 uniform=False)
         else:
             def combine(knowledge, rel, step, alive=None):
                 del rel, step
-                return _combine(mask_knowledge(knowledge, alive),
-                                R, uniform)
+                return _combine(gate(knowledge, alive), R, uniform)
         return combine
 
     if learns:
         def combine(knowledge, rel, step, alive=None):
             topo = _edge_effective(schedule.at_step(step, rel, alive),
                                    rel)
-            return _combine_topo(mask_knowledge(knowledge, alive),
-                                 topo)
+            return _combine_topo(gate(knowledge, alive), topo)
     else:
         def combine(knowledge, rel, step, alive=None):
             del rel
-            return _combine_topo(mask_knowledge(knowledge, alive),
+            return _combine_topo(gate(knowledge, alive),
                                  schedule.at_step(step, None, alive))
     return combine
 
@@ -117,9 +126,13 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
                             "pod_axis": ("pod_axis", str)})
 def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
                       mesh=None, use_wavg_kernel=False) -> Combiner:
-    """Two-level pod dispatch over a static hierarchical topology."""
+    """Two-level pod dispatch over a static hierarchical topology.
+    ``knowledge_quant_block > 0`` quantizes the window's planes to the
+    int8 wire format before anything crosses the pod axis — the
+    byte saving ``pod_dispatch.cross_pod_bytes`` accounts for."""
     del dense_R, use_wavg_kernel
     from repro.core.pod_dispatch import make_pod_dispatch
+    from repro.core.sharded_ddal import quantize_knowledge_roundtrip
     from repro.core.topology import hierarchical_layout
     if schedule is None or not isinstance(schedule, StaticSchedule):
         raise ValueError(
@@ -132,26 +145,43 @@ def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
     layout = hierarchical_layout(spec.n_agents, spec.degree)
     pod_combine = make_pod_dispatch(topology, layout, mesh=mesh,
                                     pod_axis=spec.pod_axis)
+    qb = int(getattr(spec, "knowledge_quant_block", 0) or 0)
     if estimator.learns:
         def combine(knowledge, rel, step, alive=None):
             del step
             topo = _edge_effective(topology, rel)
-            return pod_combine(knowledge, topo.relevance, alive=alive)
+            return pod_combine(
+                quantize_knowledge_roundtrip(knowledge, qb),
+                topo.relevance, alive=alive)
     else:
         def combine(knowledge, rel, step, alive=None):
             del rel, step
-            return pod_combine(knowledge, alive=alive)
+            return pod_combine(
+                quantize_knowledge_roundtrip(knowledge, qb),
+                alive=alive)
     return combine
 
 
-@COMBINERS.register("store")
+@COMBINERS.register("store",
+                    params={"quant_block": ("knowledge_quant_block",
+                                            int)})
 def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
                         mesh=None, use_wavg_kernel=False) -> Combiner:
     """Buffer-trainer eq. 4 weighted average over the (n,) vmapped
     knowledge stores; relevance already rode in on each piece's R
-    metadata at delivery time, so ``rel`` is unused here."""
-    del spec, schedule, estimator, dense_R, mesh
+    metadata at delivery time, so ``rel`` is unused here.
+
+    The default path is the *fused* share-step entry
+    (``weighted_average(fused=True)``): one pass over the ring's
+    planes, (ḡ, Σw) out — on CPU/GPU its tiled XLA form is bitwise
+    the historical two-op path; on TPU it lowers to the Pallas
+    kernel. ``use_wavg_kernel=True`` keeps the legacy per-leaf wavg
+    kernel (weights precomputed outside). Quantized stores
+    (``knowledge_quant_block > 0``) always take the fused quantized
+    entry."""
+    del schedule, estimator, dense_R, mesh
     from repro.core import knowledge as K
+    qb = int(getattr(spec, "knowledge_quant_block", 0) or 0)
 
     def combine(stores, rel, step, alive=None):
         # store contents are already membership-gated: the buffer
@@ -159,7 +189,13 @@ def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
         # into a survivor's ring, and a dead destination's own row is
         # selected away upstream — nothing to mask here
         del rel, step, alive
-        return jax.vmap(
-            lambda st: K.weighted_average(st, use_wavg_kernel))(stores)
+        if qb:
+            return jax.vmap(lambda st: K.weighted_average(
+                st, quant_block=qb))(stores)
+        if use_wavg_kernel:
+            return jax.vmap(lambda st: K.weighted_average(
+                st, use_wavg_kernel))(stores)
+        return jax.vmap(lambda st: K.weighted_average(
+            st, fused=True))(stores)
 
     return combine

@@ -26,6 +26,19 @@ Two delay-line layouts exist:
 
 All structures carry a leading agent axis when used by the vmapped
 group loop in ``repro.core.ddal``.
+
+**Quantized knowledge planes** (opt-in, ``quant_block > 0``): gradient
+pieces are stored and shipped as int8 with per-block fp32 scales
+(``repro.kernels.ddal_wavg.ref.quantize_flat`` wire format — one scale
+per ``quant_block`` consecutive elements of each flattened leaf). The
+``scale`` field on both delay-line layouts' production structures
+rides through every send/deliver path exactly like ``T``/``R``; it
+defaults to ``None``, which jax filters from the pytree, so
+non-quantized programs, shardings and existing checkpoints keep their
+historical structure bit for bit. Delay-line and store memory drop
+~4× (int8 payload + nb·4 scale bytes per plane); eq. 4 then runs over
+the quantized planes via the fused kernel entry, dequantising inside
+the block loop.
 """
 from __future__ import annotations
 
@@ -46,29 +59,50 @@ class KnowledgeStore(NamedTuple):
     R: jnp.ndarray       # (m,) relevance weights
     valid: jnp.ndarray   # (m,) bool
     ptr: jnp.ndarray     # () int32 — next write slot
+    scale: Any = None    # quantized stores: pytree mirroring grads
+                         # with fp32 leaves (m, ⌈P/quant_block⌉);
+                         # None (filtered from the pytree) keeps
+                         # fp32 stores structurally unchanged
 
 
-def make_store(params_like, m: int) -> KnowledgeStore:
+def _scale_blocks(x, quant_block: int) -> int:
+    """Number of int8 scale blocks for one (unstacked) leaf."""
+    p = int(np.prod(x.shape)) if x.shape else 1
+    return -(-p // quant_block)
+
+
+def make_store(params_like, m: int,
+               quant_block: int = 0) -> KnowledgeStore:
+    """``quant_block > 0`` builds an int8 store: grads leaves are int8
+    of the same shapes, plus per-block fp32 scales."""
+    dtype = jnp.int8 if quant_block else jnp.float32
     grads = tree_map(
-        lambda x: jnp.zeros((m,) + x.shape, jnp.float32), params_like)
+        lambda x: jnp.zeros((m,) + x.shape, dtype), params_like)
+    scale = None
+    if quant_block:
+        scale = tree_map(
+            lambda x: jnp.zeros((m, _scale_blocks(x, quant_block)),
+                                jnp.float32), params_like)
     return KnowledgeStore(
         grads=grads,
         T=jnp.zeros((m,), jnp.float32),
         R=jnp.zeros((m,), jnp.float32),
         valid=jnp.zeros((m,), bool),
         ptr=jnp.zeros((), jnp.int32),
+        scale=scale,
     )
 
 
 def append(store: KnowledgeStore, piece, T, R,
-           enabled=True) -> KnowledgeStore:
+           enabled=True, scale=None) -> KnowledgeStore:
     """Append one piece (overwrites the oldest when full). ``enabled``
     may be a traced bool — when False the store is returned unchanged
     (used to mask delivery before the sharing threshold). The write is
     a one-hot masked select rather than a scatter: XLA CPU lowers it
     to a fused elementwise op that vectorises under vmap/scan (dynamic
     scatters there cost ~10× more), and a disabled append is simply an
-    all-False mask."""
+    all-False mask. Quantized stores take the piece's per-block
+    ``scale`` pytree alongside (leaves (nb,))."""
     m = store.T.shape[0]
     en = jnp.asarray(enabled)
     slot = jnp.where(en, store.ptr % m, m)     # m ⇒ mask is all-False
@@ -79,24 +113,33 @@ def append(store: KnowledgeStore, piece, T, R,
         return jnp.where(mask, x.astype(buf.dtype), buf)
 
     grads = tree_map(lambda b, x: write(b, x), store.grads, piece)
+    new_scale = store.scale
+    if store.scale is not None:
+        if scale is None:
+            raise ValueError("quantized store: append needs the "
+                             "piece's scale pytree")
+        new_scale = tree_map(lambda b, x: write(b, x),
+                             store.scale, scale)
     return KnowledgeStore(
         grads=grads,
         T=write(store.T, jnp.broadcast_to(T, ())),
         R=write(store.R, jnp.broadcast_to(R, ())),
         valid=write(store.valid, jnp.asarray(True)),
         ptr=store.ptr + en.astype(jnp.int32),
+        scale=new_scale,
     )
 
 
 def append_many(store: KnowledgeStore, pieces, T, R,
-                deliver) -> KnowledgeStore:
+                deliver, scales=None) -> KnowledgeStore:
     """Append up to n pieces at once, in one vectorised masked pass.
 
     Ring semantics are exactly those of n sequential ``append`` calls:
     pieces with ``deliver`` True take consecutive slots from ``ptr``
     (oldest first overwritten), and when more pieces than slots arrive
     the later piece wins. pieces: pytree with leading axis n; T, R,
-    deliver: (n,).
+    deliver: (n,). Quantized stores take the pieces' per-block
+    ``scales`` pytree alongside (leaves (n, nb)).
     """
     m = store.T.shape[0]
     n = T.shape[0]
@@ -116,24 +159,54 @@ def append_many(store: KnowledgeStore, pieces, T, R,
         return jnp.where(mask, xs[sel_c].astype(buf.dtype), buf)
 
     grads = tree_map(lambda b, x: write(b, x), store.grads, pieces)
+    new_scale = store.scale
+    if store.scale is not None:
+        if scales is None:
+            raise ValueError("quantized store: append_many needs the "
+                             "pieces' scales pytree")
+        new_scale = tree_map(lambda b, x: write(b, x),
+                             store.scale, scales)
     return KnowledgeStore(
         grads=grads,
         T=write(store.T, T),
         R=write(store.R, R),
         valid=jnp.where(has, True, store.valid),
         ptr=store.ptr + jnp.sum(v),
+        scale=new_scale,
     )
 
 
 def weighted_average(store: KnowledgeStore, use_kernel: bool = False,
-                     interpret: "bool | None" = None):
+                     interpret: "bool | None" = None, *,
+                     fused: bool = False, quant_block: int = 0,
+                     impl: str = "auto"):
     """eq. 4 over the store's valid pieces → (ḡ, total_weight).
 
     ``interpret=None`` (default) lets the kernel wrapper pick: compiled
     Pallas on TPU, interpreter elsewhere (the old behaviour hardcoded
     ``interpret=True``, so the kernel *always* ran interpreted — even
     on TPU). Pass an explicit bool to override, e.g. tests forcing
-    the interpreter off-TPU."""
+    the interpreter off-TPU.
+
+    ``fused=True`` routes through the one-pass share-step entry
+    (``repro.kernels.ddal_wavg.ops.tree_fused_wavg``): the ``impl``
+    knob picks Pallas / tiled XLA, and the XLA path is bitwise-equal
+    to the historical two-op path below. Quantized stores
+    (``store.scale is not None``) always take the fused quantized
+    entry and need the store's ``quant_block``."""
+    if store.scale is not None:
+        if quant_block <= 0:
+            raise ValueError("quantized store: weighted_average needs "
+                             "its quant_block")
+        from repro.kernels.ddal_wavg import ops as wavg_ops
+        return wavg_ops.tree_fused_wavg_q(
+            store.grads, store.scale, store.T, store.R, store.valid,
+            quant_block, impl=impl, interpret=interpret)
+    if fused:
+        from repro.kernels.ddal_wavg import ops as wavg_ops
+        return wavg_ops.tree_fused_wavg(
+            store.grads, store.T, store.R, store.valid, impl=impl,
+            interpret=interpret)
     w = eq4_weights(store.T, store.R, store.valid)
     if use_kernel:
         from repro.kernels.ddal_wavg import ops as wavg_ops
@@ -159,21 +232,35 @@ class SparseInFlight(NamedTuple):
     T: jnp.ndarray        # (n, k, D+2)
     R: jnp.ndarray
     valid: jnp.ndarray    # bool
+    scale: Any = None     # quantized lines: leaves (n, k, D+2, nb)
+                          # fp32 per-block scales; None ⇒ fp32 planes
 
 
 def make_sparse_inflight(params_like, topo: Topology,
-                         max_delay: int) -> SparseInFlight:
+                         max_delay: int,
+                         quant_block: int = 0) -> SparseInFlight:
+    """``quant_block > 0`` builds an int8 delay line (~4× lighter):
+    gradient planes are int8, per-block scales ride alongside."""
     n, k = topo.nbr.shape
     planes = max_delay + 2            # D+1 delivery slots + scratch
+    dtype = jnp.int8 if quant_block else jnp.float32
     grads = tree_map(
-        lambda x: jnp.zeros((n, k, planes) + x.shape, jnp.float32),
+        lambda x: jnp.zeros((n, k, planes) + x.shape, dtype),
         params_like)
+    scale = None
+    if quant_block:
+        scale = tree_map(
+            lambda x: jnp.zeros(
+                (n, k, planes, _scale_blocks(x, quant_block)),
+                jnp.float32), params_like)
     z = jnp.zeros((n, k, planes), jnp.float32)
-    return SparseInFlight(grads=grads, T=z, R=z, valid=z.astype(bool))
+    return SparseInFlight(grads=grads, T=z, R=z, valid=z.astype(bool),
+                          scale=scale)
 
 
 def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
-                epoch, enabled, alive=None) -> SparseInFlight:
+                epoch, enabled, alive=None,
+                quant_block: int = 0) -> SparseInFlight:
     """Every agent publishes its piece; each destination gathers it
     from its in-neighbors only.
 
@@ -192,8 +279,21 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     (n, k) mask, so the blind all-True plane write is skipped and the
     gated plane/one-hot paths carry the send; ``alive=None`` compiles
     the historical program unchanged.
+
+    On an int8 delay line (``flight.scale is not None``) each source's
+    piece is quantized **once** here — the wire format — and its scale
+    planes ride every path below exactly like ``T``/``R``;
+    ``quant_block`` must match the line's build-time block size.
     """
     n, k, planes = flight.T.shape
+    scales = None
+    if flight.scale is not None:
+        if quant_block <= 0:
+            raise ValueError("quantized delay line: sparse_send needs "
+                             "its quant_block")
+        from repro.kernels.ddal_wavg import ops as wavg_ops
+        pieces, scales = wavg_ops.quantize_tree(pieces, quant_block,
+                                                lead=1)
     D1 = planes - 1                    # last plane = disabled scratch
     src = topo.nbr                                   # (n, k)
     en = jnp.asarray(enabled)
@@ -234,6 +334,9 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
                 T=wr(flight.T, T[src][:, :, None]),
                 R=wr(flight.R, topo.relevance[:, :, None]),
                 valid=wr(flight.valid, jnp.ones((n, k, 1), bool)),
+                scale=None if scales is None else tree_map(
+                    lambda b, x: wr(b, x[src][:, :, None]),
+                    flight.scale, scales),
             )
 
         # padded edges: gate per-edge with a plane read-select
@@ -251,6 +354,9 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
             T=wr(flight.T, T[src][:, :, None]),
             R=wr(flight.R, topo.relevance[:, :, None]),
             valid=wr(flight.valid, jnp.ones((n, k, 1), bool)),
+            scale=None if scales is None else tree_map(
+                lambda b, x: wr(b, x[src][:, :, None]),
+                flight.scale, scales),
         )
 
     # heterogeneous delays: fold the enable gate AND the topology mask
@@ -272,8 +378,11 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     new_T = jnp.where(hot, T[src][:, :, None], flight.T)
     new_R = jnp.where(hot, topo.relevance[:, :, None], flight.R)
     new_valid = jnp.where(hot, True, flight.valid)
+    new_scale = (None if scales is None else
+                 tree_map(lambda b, x: put(b, x), flight.scale,
+                          scales))
     return SparseInFlight(grads=grads, T=new_T, R=new_R,
-                          valid=new_valid)
+                          valid=new_valid, scale=new_scale)
 
 
 def _regular_exchange(topo: "Topology | None", m: int, k: int) -> bool:
@@ -335,6 +444,8 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
     Tm = flight.T[:, :, slot]
     Rm = flight.R[:, :, slot]
     Vm = flight.valid[:, :, slot]
+    Sm = (None if flight.scale is None else
+          tree_map(lambda b: b[:, :, slot], flight.scale))   # (n,k,nb)
     if alive is not None:
         Vm = Vm & jnp.asarray(alive, bool)[:, None]
     m = stores.T.shape[1]
@@ -358,12 +469,16 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
             R=wr(stores.R, Rm),
             valid=wr(stores.valid, Vm),
             ptr=stores.ptr + k * delivered.astype(jnp.int32),
+            scale=(None if Sm is None else
+                   tree_map(wr, stores.scale, Sm)),
         )
     else:
         def pop(dst_store, dst_idx):
             return append_many(
                 dst_store, tree_map(lambda x: x[dst_idx], pieces),
-                Tm[dst_idx], Rm[dst_idx], Vm[dst_idx])
+                Tm[dst_idx], Rm[dst_idx], Vm[dst_idx],
+                scales=(None if Sm is None else
+                        tree_map(lambda x: x[dst_idx], Sm)))
         new_stores = jax.vmap(pop)(stores, jnp.arange(n))
 
     cleared = flight._replace(

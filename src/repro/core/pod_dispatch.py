@@ -130,18 +130,30 @@ def split_topology(topo: Topology, layout: PodLayout) -> PodEdges:
 # ---------------------------------------------------------------------
 # traffic accounting
 # ---------------------------------------------------------------------
-def _edge_cost(n_params: int, dtype_bytes: int) -> int:
+def _edge_cost(n_params: int, dtype_bytes: int,
+               quant_block: int = 0) -> int:
     """Bytes one directed edge moves per share step: the source's two
-    accumulator planes (tg, rg) plus the (tsum, rsum) scalars."""
-    return 2 * n_params * dtype_bytes + 2 * 4
+    accumulator planes (tg, rg) plus the (tsum, rsum) scalars. With
+    ``quant_block > 0`` each plane is int8 wire format — 1 byte per
+    element plus one fp32 scale per ``quant_block`` elements — instead
+    of ``dtype_bytes`` per element (~4× lighter at fp32)."""
+    if quant_block > 0:
+        plane = n_params + (-(-n_params // quant_block)) * 4
+    else:
+        plane = n_params * dtype_bytes
+    return 2 * plane + 2 * 4
 
 
 def cross_pod_bytes(edges: PodEdges, n_params: int,
-                    dtype_bytes: int = 4) -> int:
+                    dtype_bytes: int = 4,
+                    quant_block: int = 0) -> int:
     """Cross-pod traffic per share step of the *dispatched* combine:
     only the directed leader edges move data over the pod axis —
-    O(pods · k_leader · |params|), independent of pod size."""
-    return int(edges.ledge.sum()) * _edge_cost(n_params, dtype_bytes)
+    O(pods · k_leader · |params|), independent of pod size.
+    ``quant_block`` mirrors ``GroupSpec.knowledge_quant_block``: int8
+    planes + per-block scales instead of ``dtype_bytes``/element."""
+    return int(edges.ledge.sum()) * _edge_cost(n_params, dtype_bytes,
+                                               quant_block)
 
 
 def relevance_exchange_bytes(n_agents: int, n_params: int,
@@ -161,16 +173,18 @@ def relevance_exchange_bytes(n_agents: int, n_params: int,
 
 
 def flat_exchange_bytes(topo: Topology, n_params: int,
-                        dtype_bytes: int = 4) -> int:
+                        dtype_bytes: int = 4,
+                        quant_block: int = 0) -> int:
     """What the single-flat-mesh combine moves between devices: every
     non-self edge's source planes cross a device boundary (a flat
     placement gives pod structure no locality) — O(n · k · |params|),
-    growing with agent count."""
+    growing with agent count. ``quant_block`` as in
+    :func:`cross_pod_bytes`."""
     nbr = np.asarray(topo.nbr)
     mask = np.asarray(topo.mask)
     self_edge = nbr == np.arange(nbr.shape[0])[:, None]
-    return int((mask & ~self_edge).sum()) * _edge_cost(n_params,
-                                                       dtype_bytes)
+    return int((mask & ~self_edge).sum()) * _edge_cost(
+        n_params, dtype_bytes, quant_block)
 
 
 # ---------------------------------------------------------------------

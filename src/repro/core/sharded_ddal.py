@@ -290,6 +290,28 @@ def mask_knowledge(know: Knowledge, alive) -> Knowledge:
         sk=None if know.sk is None else rows(know.sk))
 
 
+def quantize_knowledge_roundtrip(know: Knowledge,
+                                 q_block: int) -> Knowledge:
+    """Push the window's gradient planes (tg/rg leaves) through the
+    int8 block-quantized wire format (``repro.kernels.ddal_wavg``) —
+    what every cross-agent hop carries when
+    ``GroupSpec.knowledge_quant_block > 0``. The streaming combiners
+    apply this at combine time, so the ḡ the group consumes matches
+    the buffer trainer's quantized-delay-line semantics while the
+    window accumulators themselves stay fp32 (they never leave the
+    agent's shard). ``q_block <= 0`` is the identity — the historical
+    program, bit for bit."""
+    if q_block <= 0:
+        return know
+    from repro.kernels.ddal_wavg import ops as wavg_ops
+
+    def rt(tree):
+        q, s = wavg_ops.quantize_tree(tree, q_block, lead=1)
+        return wavg_ops.dequantize_tree(q, s, q_block)
+
+    return know._replace(tg=rt(know.tg), rg=rt(know.rg))
+
+
 def kill_agents(state: TrainState, dead) -> TrainState:
     """Host-side elastic transition: mark ``dead`` ((A,) bool) agents
     as gone. Their partial share window is zeroed — a half-window must

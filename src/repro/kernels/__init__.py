@@ -1,7 +1,11 @@
 """Pallas-TPU kernels for the framework's compute hot-spots.
 
-* ``ddal_wavg`` — the paper's eq. 4 m-way weighted gradient reduction
-  (HBM-bandwidth-bound at LLM scale); used by the knowledge stores.
+* ``ddal_wavg`` — the paper's eq. 4 share step. Alongside the original
+  m-way weighted reduction it carries the *fused* entries
+  (``fused_wavg`` / ``tree_fused_wavg`` and their int8-quantized
+  ``_q`` twins): one pass over the arrival-slot knowledge planes that
+  regenerates the eq. 4 weights in-kernel and emits (ḡ, Σw) directly.
+  Used by the knowledge stores and the ``store`` combiner.
 * ``flash_attention`` — blocked online-softmax causal GQA attention
   (optional sliding window) for the model-zoo hot path.
 * ``ssd_scan`` — Mamba2 SSD intra-chunk dual form (MXU block matmuls);
@@ -9,7 +13,14 @@
 
 Each subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd wrapper at the model-layer interface) and ``ref.py``
-(pure-jnp oracle). All are validated on CPU with ``interpret=True``;
-on-TPU lowering is selected via ``ArchConfig.attention_impl`` /
-``ssd_impl`` flags.
+(pure-jnp oracle). Validation is per entry point: every kernel runs
+on CPU under ``interpret=True`` against its oracle, and the fused
+``ddal_wavg`` entries additionally ship a tiled pure-XLA form that is
+*bitwise* the historical multi-op path — that form is what CPU/GPU
+sessions compile (``ops.resolve_impl``: ``auto`` → Pallas on TPU,
+XLA elsewhere), so interpret mode is a test vehicle, not the
+deployment path. On-TPU lowering for the model kernels is selected
+via ``ArchConfig.attention_impl`` / ``ssd_impl`` flags;
+``benchmarks/bench_wavg_kernel.py`` gates the share-step kernel
+(bitwise parity, one-pass jaxpr shape, quantization error) in CI.
 """

@@ -1,2 +1,3 @@
 from repro.kernels.ddal_wavg import ops, ref  # noqa: F401
-from repro.kernels.ddal_wavg.kernel import wavg_flat  # noqa: F401
+from repro.kernels.ddal_wavg.kernel import (  # noqa: F401
+    fused_wavg_flat, fused_wavg_q_flat, wavg_flat)

@@ -1,8 +1,25 @@
-"""Pure-jnp oracle for the DDAL eq. 4 weighted-average kernel."""
+"""Pure-jnp oracles for the DDAL eq. 4 weighted-average kernels.
+
+``wavg``/``tree_wavg`` mirror the plain contraction; ``fused_wavg``
+mirrors the fused share-step (weights from raw (T, R, valid) metadata,
+(ḡ, Σw) out) with **exactly** the float ops of the historical multi-op
+path — ``repro.core.weighting.eq4_weights`` followed by the
+``tree_weighted_sum`` tensordot — so the fused entry points are
+bitwise-comparable against it at quantization-off.
+
+``quantize_flat``/``dequantize_flat`` define the int8 block-quantized
+knowledge-plane wire format: ``q_block`` consecutive elements of the
+flat plane share one fp32 scale ``max|x| / 127``; values quantize by
+round-to-nearest-even (jnp.rint) into [-127, 127]. The roundtrip
+error is bounded per element by ``scale / 2`` of its block — the
+accuracy bound the bench gate pins.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.weighting import eq4_weights
 
 
 def wavg(G: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -18,3 +35,63 @@ def tree_wavg(grads_stacked, w):
         flat = x.reshape(m, -1).astype(jnp.float32)
         return wavg(flat, w).reshape(x.shape[1:])
     return jax.tree.map(leaf, grads_stacked)
+
+
+# ---------------------------------------------------------------------
+# fused eq. 4 oracle (the multi-op path, spelled once)
+# ---------------------------------------------------------------------
+def fused_wavg(G, T, R, valid, eps: float = 1e-12):
+    """(ḡ, Σw) from raw metadata — the multi-op bitwise oracle: the
+    exact ``eq4_weights`` + ``tensordot`` ops the knowledge stores ran
+    before fusion (``tree_weighted_sum`` contracts with the same
+    dimension numbers)."""
+    w = eq4_weights(T, R, valid, eps=eps)
+    g = jnp.tensordot(w.astype(G.dtype), G, axes=(0, 0))
+    return g.astype(jnp.float32), jnp.sum(w)
+
+
+# ---------------------------------------------------------------------
+# int8 block quantization (the knowledge-plane wire format)
+# ---------------------------------------------------------------------
+def _blocks(p: int, q_block: int) -> int:
+    return -(-p // q_block)
+
+
+def quantize_flat(G: jnp.ndarray, q_block: int):
+    """G: (..., P) float → (q: (..., P) int8, scale: (..., ⌈P/q_block⌉)
+    fp32). A short trailing block is zero-padded only for the scale
+    max — ``q`` keeps G's exact shape."""
+    p = G.shape[-1]
+    nb = _blocks(p, q_block)
+    pad = nb * q_block - p
+    Gf = jnp.asarray(G, jnp.float32)
+    Gp = jnp.pad(Gf, [(0, 0)] * (G.ndim - 1) + [(0, pad)])
+    Gb = Gp.reshape(G.shape[:-1] + (nb, q_block))
+    scale = jnp.max(jnp.abs(Gb), axis=-1) / 127.0        # (..., nb)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.rint(Gb / safe[..., None]), -127, 127)
+    q = q.astype(jnp.int8).reshape(Gp.shape)
+    if pad:
+        q = q[..., :p]
+    return q, scale
+
+
+def dequantize_flat(q: jnp.ndarray, scale: jnp.ndarray,
+                    q_block: int) -> jnp.ndarray:
+    """Inverse wire transform: q · scale, block-broadcast → fp32 of
+    q's shape."""
+    p = q.shape[-1]
+    nb = scale.shape[-1]
+    pad = nb * q_block - p
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    x = (qp.reshape(q.shape[:-1] + (nb, q_block)).astype(jnp.float32)
+         * scale[..., None])
+    x = x.reshape(qp.shape)
+    return x[..., :p] if pad else x
+
+
+def fused_wavg_q(Q, scale, T, R, valid, q_block: int,
+                 eps: float = 1e-12):
+    """Quantized-plane oracle: dequantise, then the fused oracle."""
+    return fused_wavg(dequantize_flat(Q, scale, q_block), T, R, valid,
+                      eps=eps)

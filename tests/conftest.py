@@ -73,7 +73,7 @@ try:
     # is off in both profiles — first-call jit compilation blows any
     # per-example deadline.
     hypothesis.settings.register_profile(
-        "ci", max_examples=15, deadline=None, derandomize=True)
+        "ci", max_examples=10, deadline=None, derandomize=True)
     hypothesis.settings.register_profile(
         "dev", max_examples=40, deadline=None)
     hypothesis.settings.load_profile(

@@ -607,8 +607,8 @@ def test_cli_exchange_pods_feeds_mesh_wiring():
     from the merged spec, not the legacy flag default."""
     from repro.launch import train as T
     import pytest as _pytest
-    argv = ["--mesh", "pods", "--topology", "hierarchical",
-            "--agents", "4", "--degree", "2", "--steps", "1",
+    argv = ["--mesh", "pods", "--exchange", "topology=hierarchical",
+            "--agents", "4", "--exchange", "degree=2", "--steps", "1",
             "--exchange", "pods=2"]
     # 2 pods need >= 2 devices; on a 1-device CPU rig the mesh
     # constructor is what fails — proving spec.pods reached it
@@ -616,6 +616,24 @@ def test_cli_exchange_pods_feeds_mesh_wiring():
     with _pytest.raises((ValueError, SystemExit)) as err:
         T.main(argv + ["--batch", "1", "--seq", "16"])
     assert "--mesh pods needs" not in str(err.value)
+
+
+def test_cli_legacy_flags_warn_with_migration_pointer():
+    """The legacy named flags still parse, but each explicit use must
+    emit a DeprecationWarning naming its ``--exchange`` spelling (the
+    suite runs with ``filterwarnings = error``, so an unwrapped legacy
+    spelling anywhere else fails loudly)."""
+    from types import SimpleNamespace
+    from repro.launch import train as T
+    args = SimpleNamespace(
+        **{field: None for field, _ in T._LEGACY_FLAGS.values()})
+    args.topology, args.degree = "ring", 2
+    with pytest.warns(DeprecationWarning) as rec:
+        kw = T._legacy_spec_kw(args)
+    msgs = [str(w.message) for w in rec]
+    assert any("--exchange topology=ring" in m for m in msgs)
+    assert any("--exchange degree=2" in m for m in msgs)
+    assert kw["topology"] == "ring" and kw["degree"] == 2
 
 
 # ----------------------------------------------------------------------

@@ -124,11 +124,14 @@ def test_kill_restore_continue_boundary(tmp_path):
 # ----------------------------------------------------------------------
 # streaming trainer: TrainState (Knowledge incl. sk + rel + step)
 # ----------------------------------------------------------------------
+@pytest.mark.slow
 def test_streaming_trainstate_roundtrip_with_sketch_and_rel(tmp_path):
     """Full streaming TrainState — window accumulators, the learned
     relevance EMA, the gradient sketch and the step counter — is
     bitwise across save/restore, and a restored run continues
-    bitwise."""
+    bitwise. Slow lane: it runs a reduced llama twice end to end; the
+    toy-sized roundtrips in this file pin the same leaf-for-leaf
+    save/restore guarantee in tier-1."""
     from repro import optim
     from repro.configs import get_arch_config
     from repro.configs.base import ShapeConfig

@@ -17,8 +17,14 @@ from repro.models import get_model, make_batch
 from repro.models.moe import _dispatch_indices
 
 
-@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b",
-                                  "deepseek-v2-lite-16b"])
+@pytest.mark.parametrize(
+    "arch",
+    ["qwen3-moe-30b-a3b",
+     # the deepseek cell is the slowest single test in the fast lane
+     # (~16s) and exercises the same dispatch path with shared-expert
+     # routing on top; the qwen cell keeps the dense-parity oracle in
+     # tier-1, deepseek rides the slow lane
+     pytest.param("deepseek-v2-lite-16b", marks=pytest.mark.slow)])
 def test_expert_parallel_equals_dense(arch):
     cfg = get_arch_config(arch).reduced()
     model = get_model(cfg)
