@@ -1,0 +1,247 @@
+"""Fault-transport gates: graceful degradation + fault-free overhead.
+
+Runs the buffer trainer's toy quadratic group (homogeneous target, so
+the learning curve is just the distance to the shared optimum) under
+three transports and gates the ISSUE 9 acceptance bounds:
+
+1. **Structural identity** — the default spec and an explicit
+   ``exchange_transport="none"`` trace the *same jaxpr*: the
+   fault-free program is the pre-transport program, bit for bit, so
+   its overhead is structurally zero. Epoch times are measured
+   interleaved and reported; the ≤ 2% wall-clock bound is the
+   backstop gate that fires only if the jaxpr identity is ever lost.
+2. **Zero-rate faulty is value-transparent** — forcing ``"faulty"``
+   with every rate zero allocates checksum/born planes but delivers
+   bitwise the default params (overhead reported, not gated: the toy
+   exchange is deliberately tiny, so the checksum's relative cost is
+   a worst case, not a regression signal).
+3. **Graceful degradation** — under 20% loss + 5% corruption (with
+   retransmit budget 2, jitter 1, staleness cutoff 8) the group still
+   learns: curve AUC ≤ 2× the fault-free AUC, final error ≤
+   max(4× fault-free, 1e-5), every trajectory finite.
+
+Rows land in ``BENCH_fault_transport.json`` (override ``--json``);
+any violated gate exits non-zero, so CI's fault lane fails loudly.
+
+    PYTHONPATH=src python benchmarks/bench_fault_transport.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+
+
+def _default_json() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_fault_transport.json")
+
+
+def write_json(path: str, rows: list) -> None:
+    payload = {"bench": "fault_transport",
+               "backend": jax.default_backend(), "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"wrote {path}")
+
+
+def _time_min(thunk, epochs: int, repeats: int = 5) -> float:
+    """Best-of-``repeats`` per-epoch wall time in ms."""
+    jax.block_until_ready(thunk())             # compile + warm-up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(thunk())
+        best = min(best, time.time() - t0)
+    return best / epochs * 1e3
+
+
+def _time_pair(ta, tb, epochs: int, repeats: int = 11
+               ) -> tuple[float, float]:
+    """Interleaved best-of timing of two thunks (A B A B …), so both
+    see the same thermal/scheduler window — the only way a 2% gate on
+    jaxpr-identical programs is noise-free."""
+    jax.block_until_ready(ta())
+    jax.block_until_ready(tb())
+    best_a = best_b = float("inf")
+    for r in range(repeats):
+        # alternate pair order so neither thunk always runs cold/hot
+        for which in ((0, 1) if r % 2 == 0 else (1, 0)):
+            t0 = time.time()
+            jax.block_until_ready((ta if which == 0 else tb)())
+            dt = time.time() - t0
+            if which == 0:
+                best_a = min(best_a, dt)
+            else:
+                best_b = min(best_b, dt)
+    return best_a / epochs * 1e3, best_b / epochs * 1e3
+
+
+TARGET = 1.0   # homogeneous: eq. 4 averaging cannot move the optimum
+
+
+def make_group(spec: GroupSpec, n_params: int):
+    def gen(state, key):
+        del key
+        return {"w": state["w"] - state["t"]}, {}, state
+
+    def app(state, g):
+        return {"w": state["w"] - 0.2 * g["w"], "t": state["t"]}
+
+    ddal = DDAL(spec, gen, app, lambda s: {"w": s["w"]})
+    n = spec.n_agents
+    gs = ddal.init({
+        "w": jnp.zeros((n, n_params), jnp.float32),
+        "t": jnp.full((n, n_params), TARGET, jnp.float32),
+    })
+    return ddal, gs
+
+
+def learning_curve(spec: GroupSpec, n_params: int, epochs: int
+                   ) -> tuple[np.ndarray, "jax.Array"]:
+    """Per-epoch mean |w − target| plus the final params."""
+    ddal, gs = make_group(spec, n_params)
+    step = jax.jit(ddal.epoch_step)
+    n = spec.n_agents
+    errs = []
+    for e in range(epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+        errs.append(float(jnp.mean(jnp.abs(
+            gs.agent_states["w"] - TARGET))))
+    return np.asarray(errs), gs.agent_states["w"]
+
+
+def epoch_thunk(spec: GroupSpec, n_params: int, epochs: int):
+    ddal, gs0 = make_group(spec, n_params)
+    n = spec.n_agents
+    keys = jnp.stack([jax.random.split(jax.random.PRNGKey(e), n)
+                      for e in range(epochs)])
+
+    @jax.jit
+    def run(gs):
+        def body(g, k):
+            g, _ = ddal.epoch_step(g, k)
+            return g, ()
+        return jax.lax.scan(body, gs, keys)[0]
+
+    return ddal, (lambda: run(gs0).agent_states["w"])
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI budget: small group, short curves")
+    p.add_argument("--json", default=None)
+    args = p.parse_args(argv)
+
+    n, n_params, epochs = (8, 256, 30) if args.smoke else (16, 2048, 60)
+    # timing needs a workload well above timer resolution even when
+    # the learning curves stay CI-cheap
+    t_params, t_epochs = (4096, 500) if args.smoke else (8192, 1000)
+    base_kw = dict(n_agents=n, threshold=1, minibatch=2, m_pieces=16,
+                   max_delay=1)
+    spec_default = GroupSpec(**base_kw)
+    spec_none = GroupSpec(**base_kw, exchange_transport="none")
+    spec_zero = GroupSpec(**base_kw, exchange_transport="faulty")
+    spec_faulty = GroupSpec(**base_kw, transport_loss=0.2,
+                            transport_corrupt=0.05,
+                            transport_retransmit=2,
+                            transport_jitter=1, max_staleness=8,
+                            transport_decay=0.95, transport_seed=0)
+
+    failures = []
+    rows = []
+
+    # -- gate 1: fault-free structural identity + ≤ 2% overhead -------
+    dd, gd = make_group(spec_default, n_params)
+    dn, gn = make_group(spec_none, n_params)
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    same_jaxpr = (str(jax.make_jaxpr(dd.epoch_step)(gd, keys))
+                  == str(jax.make_jaxpr(dn.epoch_step)(gn, keys)))
+    if not same_jaxpr:
+        failures.append("fault-free program is no longer structurally "
+                        "identical to exchange_transport='none'")
+    _, t_default = epoch_thunk(spec_default, t_params, t_epochs)
+    _, t_none = epoch_thunk(spec_none, t_params, t_epochs)
+    ms_default, ms_none = _time_pair(t_default, t_none, t_epochs)
+    overhead = ms_default / ms_none - 1.0
+    # while the two programs are jaxpr-identical the true overhead is
+    # structurally zero and any measured delta is scheduler noise; the
+    # timed 2% bound is the backstop that fires the day the identity
+    # above is relaxed and a real fault-free cost could creep in
+    if not same_jaxpr and abs(overhead) > 0.02:
+        failures.append(
+            f"fault-free transport overhead {overhead:+.2%} exceeds "
+            f"2% (default {ms_default:.3f} ms vs none "
+            f"{ms_none:.3f} ms)")
+    rows.append({"row": "structural", "same_jaxpr": same_jaxpr,
+                 "ms_default": ms_default, "ms_none": ms_none,
+                 "overhead": overhead})
+    print(f"[structural] same_jaxpr={same_jaxpr} "
+          f"default={ms_default:.3f}ms none={ms_none:.3f}ms "
+          f"overhead={overhead:+.2%}")
+
+    # -- gate 2: zero-rate 'faulty' delivers bitwise-default values ---
+    curve_free, w_free = learning_curve(spec_default, n_params, epochs)
+    curve_zero, w_zero = learning_curve(spec_zero, n_params, epochs)
+    bitwise = bool((np.asarray(w_free) == np.asarray(w_zero)).all())
+    if not bitwise:
+        failures.append("zero-rate 'faulty' transport changed "
+                        "delivered values (must be bitwise default)")
+    _, t_zero = epoch_thunk(spec_zero, t_params, t_epochs)
+    ms_zero = _time_min(t_zero, t_epochs)
+    rows.append({"row": "zero_faulty", "bitwise_default": bitwise,
+                 "ms": ms_zero,
+                 "checksum_overhead": ms_zero / ms_none - 1.0})
+    print(f"[zero_faulty] bitwise={bitwise} {ms_zero:.3f}ms "
+          f"(checksum machinery {ms_zero / ms_none - 1.0:+.2%}, "
+          f"informational)")
+
+    # -- gate 3: survivors learn under 20% loss + 5% corruption -------
+    curve_fault, w_fault = learning_curve(spec_faulty, n_params,
+                                          epochs)
+    finite = bool(np.isfinite(curve_fault).all()
+                  and np.isfinite(np.asarray(w_fault)).all())
+    auc_free, auc_fault = float(curve_free.sum()), float(
+        curve_fault.sum())
+    final_free, final_fault = float(curve_free[-1]), float(
+        curve_fault[-1])
+    auc_ok = auc_fault <= 2.0 * auc_free
+    final_ok = final_fault <= max(4.0 * final_free, 1e-5)
+    if not finite:
+        failures.append("NaN/inf in the faulted run")
+    if not auc_ok:
+        failures.append(
+            f"learning-curve AUC under faults {auc_fault:.4f} exceeds "
+            f"2x the fault-free {auc_free:.4f}")
+    if not final_ok:
+        failures.append(
+            f"final error under faults {final_fault:.2e} exceeds "
+            f"max(4x fault-free {final_free:.2e}, 1e-5)")
+    rows.append({"row": "loss20", "finite": finite,
+                 "auc_free": auc_free, "auc_fault": auc_fault,
+                 "final_free": final_free, "final_fault": final_fault,
+                 "curve_free": curve_free.tolist(),
+                 "curve_fault": curve_fault.tolist()})
+    print(f"[loss20] finite={finite} auc {auc_fault:.4f} vs "
+          f"{auc_free:.4f} (x{auc_fault / max(auc_free, 1e-12):.2f}) "
+          f"final {final_fault:.2e} vs {final_free:.2e}")
+
+    write_json(args.json or _default_json(), rows)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit("fault-transport gates FAILED")
+    print("all fault-transport gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import zipfile
 from typing import Any
 
 import jax
@@ -50,24 +51,57 @@ def restore(path: str, template: Any, strict: bool = True) -> Any:
     template; shapes must match exactly). ``strict=False`` keeps the
     template's value for leaves absent from the checkpoint — e.g.
     restoring a pre-elastic checkpoint into an elastic state whose
-    ``alive`` mask the checkpoint never saw."""
-    with np.load(path) as data:
+    ``alive`` mask the checkpoint never saw.
+
+    A damaged checkpoint is detected up front and raises one
+    ``ValueError`` describing everything wrong — an unreadable /
+    truncated archive, every missing leaf (strict mode), and every
+    shape mismatch with the checkpoint vs template shapes — instead
+    of a raw ``KeyError`` / broadcast error surfacing from deep
+    inside the tree map."""
+    # open the handle ourselves: np.load(path) can leak its file
+    # object when the zip directory is unreadable (truncated write),
+    # and the test suite promotes ResourceWarning to an error
+    with open(path, "rb") as fh:
+        try:
+            data = np.load(fh)
+        except (zipfile.BadZipFile, ValueError, OSError) as e:
+            raise ValueError(
+                f"checkpoint {path!r} is unreadable (truncated, or "
+                f"not an .npz archive): {e}") from e
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
             template)
+        problems = []
         new_leaves = []
         for kpath, leaf in paths_leaves:
             key = jax.tree_util.keystr(kpath)
             if key not in data:
                 if not strict:
                     new_leaves.append(leaf)
-                    continue
-                raise KeyError(f"checkpoint missing leaf {key!r}")
-            arr = data[key]
+                else:
+                    problems.append(
+                        f"missing leaf {key!r} (template expects "
+                        f"shape {tuple(leaf.shape)})")
+                continue
+            try:
+                arr = data[key]
+            except (zipfile.BadZipFile, ValueError, OSError) as e:
+                problems.append(
+                    f"unreadable leaf {key!r} (truncated entry: {e})")
+                continue
             if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(
-                    f"shape mismatch at {key}: checkpoint "
-                    f"{arr.shape} vs template {leaf.shape}")
+                problems.append(
+                    f"shape mismatch at {key!r}: checkpoint "
+                    f"{tuple(arr.shape)} vs template "
+                    f"{tuple(leaf.shape)}")
+                continue
             new_leaves.append(arr.astype(leaf.dtype))
+        if problems:
+            raise ValueError(
+                f"checkpoint {path!r} does not match the template "
+                f"({len(problems)} problem"
+                f"{'s' if len(problems) > 1 else ''}): "
+                + "; ".join(problems))
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 

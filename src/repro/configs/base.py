@@ -263,6 +263,37 @@ class GroupSpec:
                                       # (whole sublane row groups of
                                       # the wavg kernel tile). 0 = fp32
                                       # planes, bitwise-legacy.
+    # -- transport faults (repro.core.transport) ----------------------
+    # Seeded per-edge message faults on the exchange path. All-zero
+    # rates keep the exchange structurally identical to the perfect-
+    # delivery programs (the same contract elastic=False honors).
+    transport_loss: float = 0.0       # per-message per-edge loss prob.
+    transport_dup: float = 0.0        # duplicate-delivery probability
+    transport_corrupt: float = 0.0    # in-flight payload-garble prob.
+                                      # (checksummed + quarantined at
+                                      # deliver: exactly-zero eq. 4
+                                      # weight)
+    transport_jitter: int = 0         # max uniform extra delivery
+                                      # delay (epochs) on top of the
+                                      # delay model
+    transport_retransmit: int = 0     # retry budget per lost message
+                                      # (exponential backoff 1,2,4,…
+                                      # epochs; resolved at plan time)
+    transport_seed: int = 0           # fault-plan seed (numpy RNG —
+                                      # never touches trainer PRNG)
+    transport_horizon: int = 256      # planned epochs before the
+                                      # fault history replays
+    transport_decay: float = 1.0      # staleness discount per epoch
+                                      # of arrival-slot age on the
+                                      # eq. 4 T/R terms (1.0 = none)
+    max_staleness: Optional[int] = None   # hard cutoff: arrival slots
+                                      # older than this many epochs
+                                      # get zero eq. 4 weight; when no
+                                      # slot survives the agent falls
+                                      # back to its purely-local
+                                      # update. None disables age
+                                      # tracking (buffer trainer only).
+    exchange_transport: str = "auto"  # auto | none | faulty
 
     def __post_init__(self):
         # deferred imports: repro.core modules import this module for
@@ -366,3 +397,45 @@ class GroupSpec:
                 f"knowledge_quant_block must be a multiple of 128 "
                 f"dividing 8192 (one scale per whole sublane row group "
                 f"of the wavg kernel tile), got {qb}")
+        for name in ("transport_loss", "transport_dup",
+                     "transport_corrupt"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(
+                    f"{name} is a per-message probability and must be "
+                    f"in [0, 1], got {p}")
+        if self.transport_jitter < 0:
+            raise ValueError(
+                f"transport_jitter must be >= 0 (max extra delivery "
+                f"delay in epochs), got {self.transport_jitter}")
+        if not 0 <= self.transport_retransmit <= 8:
+            raise ValueError(
+                f"transport_retransmit must be in [0, 8] (the delay "
+                f"line grows by the 2^budget - 1 worst-case backoff), "
+                f"got {self.transport_retransmit}")
+        if self.transport_horizon < 1:
+            raise ValueError(
+                f"transport_horizon must be >= 1 (planned epochs "
+                f"before the fault history replays), got "
+                f"{self.transport_horizon}")
+        if not 0.0 < self.transport_decay <= 1.0:
+            raise ValueError(
+                f"transport_decay must be in (0, 1] (per-epoch "
+                f"staleness discount; 1.0 = none), got "
+                f"{self.transport_decay}")
+        if self.max_staleness is not None and self.max_staleness < 1:
+            raise ValueError(
+                f"max_staleness must be >= 1 (epochs; None disables "
+                f"the cutoff), got {self.max_staleness}")
+        validate_choice("transport", self.exchange_transport)
+        if self.exchange_transport == "none" and (
+                self.transport_loss > 0 or self.transport_dup > 0
+                or self.transport_corrupt > 0
+                or self.transport_jitter > 0):
+            raise ValueError(
+                "exchange_transport='none' would silently ignore the "
+                "nonzero transport fault knobs (loss="
+                f"{self.transport_loss}, dup={self.transport_dup}, "
+                f"corrupt={self.transport_corrupt}, jitter="
+                f"{self.transport_jitter}) — use 'faulty' (or 'auto') "
+                "or zero the rates")

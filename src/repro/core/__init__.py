@@ -32,6 +32,13 @@ from repro.core.pod_dispatch import (  # noqa: F401
     relevance_exchange_bytes,
     split_topology,
 )
+from repro.core.transport import (  # noqa: F401
+    Transport,
+    TransportFaults,
+    TransportPlan,
+    make_transport,
+    transport_schedule,
+)
 from repro.core.sharded_ddal import (  # noqa: F401
     Knowledge,
     TrainState,

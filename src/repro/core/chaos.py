@@ -12,6 +12,12 @@ decisions between jitted epochs (``DDAL.kill`` / ``DDAL.revive``,
 ``sharded_ddal.kill_agents`` / ``revive_agents``), and keeping the
 planner in numpy means replaying a schedule can never perturb a
 trainer's PRNG stream.
+
+This module injects *membership* faults — whole agents die and
+revive. Its sibling ``repro.core.transport`` injects *message* faults
+(per-edge loss / duplication / corruption / delay-jitter on the
+exchange path) with the same planned-up-front design; the two compose
+freely, e.g. the CI chaos lane killing agents over a lossy transport.
 """
 from __future__ import annotations
 

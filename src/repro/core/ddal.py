@@ -137,6 +137,15 @@ class DDAL:
         self.elastic = bool(getattr(spec, "elastic", False))
         self.quant_block = int(getattr(spec, "knowledge_quant_block",
                                        0) or 0)
+        # faulty transport / staleness cutoff: when either can starve
+        # an agent of fresh knowledge on an update epoch, the empty-
+        # store branch degrades to the purely-local update instead of
+        # holding (the paper's independent-learning fallback)
+        self.transport = getattr(exchange, "transport", None)
+        self.track_born = bool(getattr(exchange, "track_born", False))
+        self.local_fallback = (
+            self.transport is not None
+            or getattr(spec, "max_staleness", None) is not None)
 
     # ------------------------------------------------------------------
     def init(self, agent_states) -> GroupState:
@@ -145,11 +154,13 @@ class DDAL:
         params0 = self.params_of(tree_map(lambda x: x[0], agent_states))
         stores = jax.vmap(lambda _: K.make_store(params0,
                                                  self.spec.m_pieces,
-                                                 self.quant_block))(
+                                                 self.quant_block,
+                                                 self.track_born))(
             jnp.arange(n))
-        flight = K.make_sparse_inflight(params0, self.static_topology,
-                                        self.max_delay,
-                                        self.quant_block)
+        flight = K.make_sparse_inflight(
+            params0, self.static_topology, self.max_delay,
+            self.quant_block, transport=self.transport is not None,
+            track_born=self.track_born)
         alive = jnp.ones((n,), bool) if self.elastic else None
         return GroupState(agent_states=agent_states, stores=stores,
                           flight=flight,
@@ -190,9 +201,12 @@ class DDAL:
         # --- lines 8–10: append + async exchange over the graph -------
         T = jnp.broadcast_to(training_experience(epoch, spec.t_weighting),
                              (n,))
+        faults = (None if self.transport is None
+                  else self.transport.at(epoch))
         flight = K.sparse_send(gs.flight, topo, grads, T,
                                epoch, sharing, alive,
-                               quant_block=self.quant_block)
+                               quant_block=self.quant_block,
+                               faults=faults)
         # the delivery fast-path hint needs only static facts (mask,
         # delay, m % k) — valid whatever the traced nbr table says
         flight, stores = K.sparse_deliver(flight, gs.stores, epoch,
@@ -215,8 +229,14 @@ class DDAL:
         def group_update(states):
             gbar, wsum = ex.combine(stores, learned, epoch)
             updated = jax.vmap(self.apply_grads)(states, gbar)
-            # only update agents with ≥1 valid piece in store
-            return _tree_select(wsum > 0, updated, states)
+            # only update agents with ≥1 valid piece in store; under a
+            # faulty transport / staleness cutoff an empty store means
+            # every neighbor's knowledge was lost, quarantined or too
+            # stale — degrade to the purely-local update rather than
+            # stalling (fault-free specs keep the historical hold)
+            empty = (jax.vmap(self.apply_grads)(states, grads)
+                     if self.local_fallback else states)
+            return _tree_select(wsum > 0, updated, empty)
 
         branch = (warmup.astype(jnp.int32)
                   + 2 * is_update.astype(jnp.int32))
@@ -271,7 +291,9 @@ class DDAL:
             valid=clear_rows(gs.stores.valid),
             ptr=jnp.where(dead, 0, gs.stores.ptr),
             scale=(None if gs.stores.scale is None else
-                   tree_map(clear_rows, gs.stores.scale)))
+                   tree_map(clear_rows, gs.stores.scale)),
+            born=(None if gs.stores.born is None else
+                  clear_rows(gs.stores.born)))
         return gs._replace(stores=stores, flight=flight, alive=alive)
 
     def revive(self, gs: GroupState, mask,

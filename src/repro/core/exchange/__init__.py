@@ -29,6 +29,7 @@ from repro.core.exchange.registry import (
     ESTIMATORS,
     REGISTRIES,
     SCHEDULES,
+    TRANSPORTS,
     Registry,
     cli_options,
     validate_choice,
@@ -39,6 +40,10 @@ from repro.core.exchange.schedules import (
     StaticSchedule,
     TopologySchedule,
 )
+
+# registers the "none"/"faulty" transport strategies (the module only
+# needs the registry above — no import cycle)
+import repro.core.transport  # noqa: E402,F401
 
 __all__ = [
     "KINDS",
@@ -58,6 +63,7 @@ __all__ = [
     "ESTIMATORS",
     "DELAYS",
     "COMBINERS",
+    "TRANSPORTS",
     "cli_options",
     "validate_choice",
 ]

@@ -88,7 +88,7 @@ class ExchangeProtocol:
                  schedule: Optional[TopologySchedule],
                  estimator: RelevanceEstimator,
                  delay_model: DelayModel, combiner,
-                 static_topology: Topology):
+                 static_topology: Topology, transport=None):
         self.spec = spec
         self.kind = kind
         self.schedule = schedule
@@ -96,8 +96,29 @@ class ExchangeProtocol:
         self.delay_model = delay_model
         self.combiner = combiner
         self.static_topology = static_topology
+        self.transport = transport
         sched_delay = schedule.max_delay if schedule is not None else 0
         self.max_delay = max(sched_delay, spec.max_delay)
+        if transport is not None:
+            # jitter / retransmit backoff / the duplicate's +1 slot
+            # all land deeper in the delay line; the headroom is
+            # knob-derived (not plan-realised), so the compiled
+            # program shape never depends on the fault draw
+            self.max_delay += transport.extra_delay
+        ms = getattr(spec, "max_staleness", None)
+        decay = float(getattr(spec, "transport_decay", 1.0))
+        #: stores/delay lines carry per-piece send epochs (staleness
+        #: cutoff and/or age-discounted eq. 4 weighting reads them)
+        self.track_born = bool(
+            kind == "buffer"
+            and (ms is not None
+                 or (transport is not None and decay < 1.0)))
+
+    def transport_at(self, step):
+        """This step's per-edge fault slice (``None`` on a perfect
+        transport — the trainers skip the faulted send path)."""
+        return (None if self.transport is None
+                else self.transport.at(step))
 
     # -- facts ---------------------------------------------------------
     @property
@@ -379,25 +400,54 @@ def build_exchange(spec, mesh=None, *, kind: Optional[str] = None,
             f"would silently hold the uniform prior forever; use the "
             f"buffer trainer for observation-statistics relevance")
 
+    from repro.core.transport import make_transport, transport_enabled
+    faulty = transport_enabled(spec)
+    if kind == "streaming":
+        if getattr(spec, "max_staleness", None) is not None:
+            raise ValueError(
+                "max_staleness ages buffer-trainer arrival slots; the "
+                "streaming trainer's window accumulators are rebuilt "
+                "every share round and have no staleness to cut — "
+                "drop max_staleness or use the buffer trainer")
+        if faulty and (spec.transport_jitter > 0
+                       or spec.transport_retransmit > 0):
+            raise ValueError(
+                "transport_jitter / transport_retransmit delay "
+                "deliveries through the buffer trainer's delay line; "
+                "the streaming trainer exchanges whole windows at "
+                "share steps (no line to delay — a message is either "
+                "in this round or gone), got jitter="
+                f"{spec.transport_jitter}, retransmit="
+                f"{spec.transport_retransmit}; zero them or use the "
+                "buffer trainer")
+
     # the streaming global-sum fast path: no graph object at all when
     # the spec names the full topology with nothing time-varying (an
     # explicit relevance matrix then weights the dense eq. 4 directly)
+    # — a faulty transport drops per-round *edges*, so it always
+    # needs the edge-table path
     dense_R = None
     if (kind == "streaming" and topology is None
             and spec.topology == "full" and spec.resample_every == 0
-            and sched_key == "static"):
+            and sched_key == "static" and not faulty):
         schedule = None
         dense_R = relevance
     else:
         schedule = _make_schedule(spec, sched_key, topology, relevance,
                                   delay, delay_model)
 
+    transport = make_transport(
+        spec, tuple(schedule.base.nbr.shape)
+        if schedule is not None else (spec.n_agents, spec.n_agents))
+
     combiner = COMBINERS.get(comb_key)(
         spec=spec, schedule=schedule, estimator=estimator,
-        dense_R=dense_R, mesh=mesh, use_wavg_kernel=use_wavg_kernel)
+        dense_R=dense_R, mesh=mesh, use_wavg_kernel=use_wavg_kernel,
+        transport=transport)
 
     static_topo = schedule.base if schedule is not None else None
     return ExchangeProtocol(spec=spec, kind=kind, schedule=schedule,
                             estimator=estimator,
                             delay_model=delay_model, combiner=combiner,
-                            static_topology=static_topo)
+                            static_topology=static_topo,
+                            transport=transport)

@@ -68,14 +68,24 @@ def _edge_effective(topo, rel):
                             "quant_block": ("knowledge_quant_block",
                                             int)})
 def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
-                       mesh=None, use_wavg_kernel=False) -> Combiner:
+                       mesh=None, use_wavg_kernel=False,
+                       transport=None) -> Combiner:
     """Streaming single-mesh combine. ``schedule=None`` marks the
     topology-free case (``full`` graph, no explicit object): the
     global-sum fast path when nothing weights the edges, the dense
     eq. 4 matmul otherwise. ``knowledge_quant_block > 0`` pushes the
     window's gradient planes through the int8 wire format before the
     aggregation (``quantize_knowledge_roundtrip``); 0 traces the
-    historical program bit for bit."""
+    historical program bit for bit.
+
+    ``transport`` (a ``repro.core.transport.Transport``) makes each
+    share round ride the faulty network: edges whose message this
+    round is lost or corrupted are dropped from the round's edge
+    table (zero weight in both eq. 4 sums — the streaming equivalent
+    of the buffer trainer's hole slots + quarantine), while the
+    destination's own window always survives, so the degradation
+    limit is exactly the local update. Duplication and jitter are
+    no-ops on idempotent window sums with no delay line."""
     del mesh, use_wavg_kernel
     from repro.core.sharded_ddal import (
         _combine,
@@ -92,6 +102,12 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
             mask_knowledge(knowledge, alive), qb)
 
     if schedule is None:
+        if transport is not None:
+            raise ValueError(
+                "the faulty transport drops per-round edges and needs "
+                "an edge table — build_exchange keeps a schedule when "
+                "transport is enabled, so a None schedule here is a "
+                "construction bug")
         uniform = (dense_R is None and spec.r_weighting == "uniform"
                    and not learns)
         R = (dense_R if dense_R is not None
@@ -106,6 +122,25 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
             def combine(knowledge, rel, step, alive=None):
                 del rel, step
                 return _combine(gate(knowledge, alive), R, uniform)
+        return combine
+
+    if transport is not None:
+        from repro.core.sharded_ddal import drop_topology_edges
+
+        if learns:
+            def combine(knowledge, rel, step, alive=None):
+                topo = _edge_effective(
+                    schedule.at_step(step, rel, alive), rel)
+                keep = transport.deliver_mask(step, topo.nbr)
+                return _combine_topo(gate(knowledge, alive),
+                                     drop_topology_edges(topo, keep))
+        else:
+            def combine(knowledge, rel, step, alive=None):
+                del rel
+                topo = schedule.at_step(step, None, alive)
+                keep = transport.deliver_mask(step, topo.nbr)
+                return _combine_topo(gate(knowledge, alive),
+                                     drop_topology_edges(topo, keep))
         return combine
 
     if learns:
@@ -125,12 +160,19 @@ def make_flat_combiner(*, spec, schedule, estimator, dense_R=None,
                     params={"pods": ("pods", int),
                             "pod_axis": ("pod_axis", str)})
 def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
-                      mesh=None, use_wavg_kernel=False) -> Combiner:
+                      mesh=None, use_wavg_kernel=False,
+                      transport=None) -> Combiner:
     """Two-level pod dispatch over a static hierarchical topology.
     ``knowledge_quant_block > 0`` quantizes the window's planes to the
     int8 wire format before anything crosses the pod axis — the
     byte saving ``pod_dispatch.cross_pod_bytes`` accounts for."""
     del dense_R, use_wavg_kernel
+    if transport is not None:
+        raise ValueError(
+            "the 'pod' combiner lowers a static two-level collective "
+            "and cannot drop per-round faulty edges — use the 'flat' "
+            "combiner with transport faults, or zero the transport_* "
+            "rates for pod dispatch")
     from repro.core.pod_dispatch import make_pod_dispatch
     from repro.core.sharded_ddal import quantize_knowledge_roundtrip
     from repro.core.topology import hierarchical_layout
@@ -166,7 +208,8 @@ def make_pod_combiner(*, spec, schedule, estimator, dense_R=None,
                     params={"quant_block": ("knowledge_quant_block",
                                             int)})
 def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
-                        mesh=None, use_wavg_kernel=False) -> Combiner:
+                        mesh=None, use_wavg_kernel=False,
+                        transport=None) -> Combiner:
     """Buffer-trainer eq. 4 weighted average over the (n,) vmapped
     knowledge stores; relevance already rode in on each piece's R
     metadata at delivery time, so ``rel`` is unused here.
@@ -178,17 +221,49 @@ def make_store_combiner(*, spec, schedule, estimator, dense_R=None,
     kernel. ``use_wavg_kernel=True`` keeps the legacy per-leaf wavg
     kernel (weights precomputed outside). Quantized stores
     (``knowledge_quant_block > 0``) always take the fused quantized
-    entry."""
+    entry.
+
+    **Staleness-aware weighting** (``max_staleness`` set, or a faulty
+    ``transport`` with ``transport_decay < 1``): each piece's age at
+    combine time is ``step - born`` (the send epoch rides with the
+    piece). Pieces older than ``max_staleness`` epochs get their
+    ``valid`` bit cut — exactly zero eq. 4 weight — and the surviving
+    T and R terms are discounted by ``decay**age`` before the
+    normalised eq. 4 weights are formed, so fresher knowledge
+    dominates. When every cross piece ages out, the weight sum hits
+    zero and the trainer degrades to its purely-local update."""
     del schedule, estimator, dense_R, mesh
     from repro.core import knowledge as K
     qb = int(getattr(spec, "knowledge_quant_block", 0) or 0)
+    ms = getattr(spec, "max_staleness", None)
+    decay = (float(getattr(spec, "transport_decay", 1.0))
+             if transport is not None else 1.0)
+    stale_gate = ms is not None or decay < 1.0
+
+    def age_gate(stores, step):
+        if stores.born is None:
+            raise ValueError(
+                "staleness-aware combine needs born-tracked stores "
+                "(make_store(..., track_born=True)) — the trainer's "
+                "init() was built against a different spec")
+        age = jnp.asarray(step, jnp.int32) - stores.born   # (n, m)
+        valid = stores.valid
+        if ms is not None:
+            valid = valid & (age <= ms)
+        T, R = stores.T, stores.R
+        if decay < 1.0:
+            d = decay ** jnp.maximum(age, 0).astype(jnp.float32)
+            T, R = T * d, R * d
+        return stores._replace(T=T, R=R, valid=valid)
 
     def combine(stores, rel, step, alive=None):
         # store contents are already membership-gated: the buffer
         # trainer's send/deliver path never lets a dead agent's piece
         # into a survivor's ring, and a dead destination's own row is
         # selected away upstream — nothing to mask here
-        del rel, step, alive
+        del rel, alive
+        if stale_gate:
+            stores = age_gate(stores, step)
         if qb:
             return jax.vmap(lambda st: K.weighted_average(
                 st, quant_block=qb))(stores)

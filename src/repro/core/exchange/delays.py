@@ -18,6 +18,13 @@ at trace time). Three strategies are registered:
     d·latency epochs late, latency = ``max(GroupSpec.max_delay, 1)``.
     Static schedules only — hop counts are properties of a fixed
     graph.
+
+Transport *jitter* (``repro.core.transport`` — per-message random
+extra delay, plus retransmit backoff) composes on top of whichever
+model is attached: the model gives the edge's deterministic base
+delay, the fault plan adds its per-epoch extra, and
+``build_exchange`` sizes the delay line for the sum (the knob-derived
+worst case, so the program shape never depends on the fault draw).
 """
 from __future__ import annotations
 

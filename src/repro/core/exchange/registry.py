@@ -77,12 +77,14 @@ SCHEDULES = Registry("topology schedule")
 ESTIMATORS = Registry("relevance estimator")
 DELAYS = Registry("delay model")
 COMBINERS = Registry("combiner")
+TRANSPORTS = Registry("transport fault model")
 
 REGISTRIES: Dict[str, Registry] = {
     "schedule": SCHEDULES,
     "estimator": ESTIMATORS,
     "delay": DELAYS,
     "combiner": COMBINERS,
+    "transport": TRANSPORTS,
 }
 
 
@@ -107,6 +109,7 @@ def cli_options() -> Dict[str, Tuple[str, type]]:
         "estimator": ("exchange_estimator", str),
         "delay": ("exchange_delay", str),
         "combiner": ("exchange_combiner", str),
+        "transport": ("exchange_transport", str),
     }
     for reg in REGISTRIES.values():
         opts.update(reg.cli_params())

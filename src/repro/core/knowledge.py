@@ -63,6 +63,10 @@ class KnowledgeStore(NamedTuple):
                          # with fp32 leaves (m, ⌈P/quant_block⌉);
                          # None (filtered from the pytree) keeps
                          # fp32 stores structurally unchanged
+    born: Any = None     # staleness tracking: (m,) int32 send epoch
+                         # of each piece (transport faults /
+                         # max_staleness); None keeps legacy stores
+                         # structurally unchanged
 
 
 def _scale_blocks(x, quant_block: int) -> int:
@@ -71,10 +75,11 @@ def _scale_blocks(x, quant_block: int) -> int:
     return -(-p // quant_block)
 
 
-def make_store(params_like, m: int,
-               quant_block: int = 0) -> KnowledgeStore:
+def make_store(params_like, m: int, quant_block: int = 0,
+               track_born: bool = False) -> KnowledgeStore:
     """``quant_block > 0`` builds an int8 store: grads leaves are int8
-    of the same shapes, plus per-block fp32 scales."""
+    of the same shapes, plus per-block fp32 scales. ``track_born``
+    adds the (m,) int32 send-epoch plane staleness weighting reads."""
     dtype = jnp.int8 if quant_block else jnp.float32
     grads = tree_map(
         lambda x: jnp.zeros((m,) + x.shape, dtype), params_like)
@@ -90,11 +95,12 @@ def make_store(params_like, m: int,
         valid=jnp.zeros((m,), bool),
         ptr=jnp.zeros((), jnp.int32),
         scale=scale,
+        born=jnp.zeros((m,), jnp.int32) if track_born else None,
     )
 
 
 def append(store: KnowledgeStore, piece, T, R,
-           enabled=True, scale=None) -> KnowledgeStore:
+           enabled=True, scale=None, born=None) -> KnowledgeStore:
     """Append one piece (overwrites the oldest when full). ``enabled``
     may be a traced bool — when False the store is returned unchanged
     (used to mask delivery before the sharing threshold). The write is
@@ -120,6 +126,13 @@ def append(store: KnowledgeStore, piece, T, R,
                              "piece's scale pytree")
         new_scale = tree_map(lambda b, x: write(b, x),
                              store.scale, scale)
+    new_born = store.born
+    if store.born is not None:
+        if born is None:
+            raise ValueError("staleness-tracked store: append needs "
+                             "the piece's born epoch")
+        new_born = write(store.born,
+                         jnp.asarray(born, jnp.int32))
     return KnowledgeStore(
         grads=grads,
         T=write(store.T, jnp.broadcast_to(T, ())),
@@ -127,11 +140,12 @@ def append(store: KnowledgeStore, piece, T, R,
         valid=write(store.valid, jnp.asarray(True)),
         ptr=store.ptr + en.astype(jnp.int32),
         scale=new_scale,
+        born=new_born,
     )
 
 
 def append_many(store: KnowledgeStore, pieces, T, R,
-                deliver, scales=None) -> KnowledgeStore:
+                deliver, scales=None, borns=None) -> KnowledgeStore:
     """Append up to n pieces at once, in one vectorised masked pass.
 
     Ring semantics are exactly those of n sequential ``append`` calls:
@@ -166,6 +180,12 @@ def append_many(store: KnowledgeStore, pieces, T, R,
                              "pieces' scales pytree")
         new_scale = tree_map(lambda b, x: write(b, x),
                              store.scale, scales)
+    new_born = store.born
+    if store.born is not None:
+        if borns is None:
+            raise ValueError("staleness-tracked store: append_many "
+                             "needs the pieces' born epochs")
+        new_born = write(store.born, jnp.asarray(borns, jnp.int32))
     return KnowledgeStore(
         grads=grads,
         T=write(store.T, T),
@@ -173,6 +193,7 @@ def append_many(store: KnowledgeStore, pieces, T, R,
         valid=jnp.where(has, True, store.valid),
         ptr=store.ptr + jnp.sum(v),
         scale=new_scale,
+        born=new_born,
     )
 
 
@@ -234,13 +255,23 @@ class SparseInFlight(NamedTuple):
     valid: jnp.ndarray    # bool
     scale: Any = None     # quantized lines: leaves (n, k, D+2, nb)
                           # fp32 per-block scales; None ⇒ fp32 planes
+    chk: Any = None       # faulty transport: (n, k, D+2) fp32 payload
+                          # checksum computed at send, verified at
+                          # deliver (corruption quarantine); None ⇒
+                          # perfect delivery, structurally unchanged
+    born: Any = None      # staleness tracking: (n, k, D+2) int32 send
+                          # epoch riding with each in-flight piece
 
 
 def make_sparse_inflight(params_like, topo: Topology,
-                         max_delay: int,
-                         quant_block: int = 0) -> SparseInFlight:
+                         max_delay: int, quant_block: int = 0,
+                         transport: bool = False,
+                         track_born: bool = False) -> SparseInFlight:
     """``quant_block > 0`` builds an int8 delay line (~4× lighter):
-    gradient planes are int8, per-block scales ride alongside."""
+    gradient planes are int8, per-block scales ride alongside.
+    ``transport`` adds the checksum planes the faulty transport
+    verifies at deliver; ``track_born`` the int32 send-epoch planes
+    staleness weighting needs. Both default off — the legacy pytree."""
     n, k = topo.nbr.shape
     planes = max_delay + 2            # D+1 delivery slots + scratch
     dtype = jnp.int8 if quant_block else jnp.float32
@@ -254,13 +285,16 @@ def make_sparse_inflight(params_like, topo: Topology,
                 (n, k, planes, _scale_blocks(x, quant_block)),
                 jnp.float32), params_like)
     z = jnp.zeros((n, k, planes), jnp.float32)
-    return SparseInFlight(grads=grads, T=z, R=z, valid=z.astype(bool),
-                          scale=scale)
+    return SparseInFlight(
+        grads=grads, T=z, R=z, valid=z.astype(bool), scale=scale,
+        chk=z if transport else None,
+        born=(jnp.zeros((n, k, planes), jnp.int32)
+              if track_born else None))
 
 
 def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
-                epoch, enabled, alive=None,
-                quant_block: int = 0) -> SparseInFlight:
+                epoch, enabled, alive=None, quant_block: int = 0,
+                faults=None) -> SparseInFlight:
     """Every agent publishes its piece; each destination gathers it
     from its in-neighbors only.
 
@@ -284,6 +318,19 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     piece is quantized **once** here — the wire format — and its scale
     planes ride every path below exactly like ``T``/``R``;
     ``quant_block`` must match the line's build-time block size.
+
+    ``faults`` (a ``repro.core.transport.TransportFaults`` slice for
+    this epoch, on a line built with ``transport=True``) routes the
+    send through the faulted one-hot path: dropped edges select the
+    scratch plane (a hole — never delivered), jitter/retransmit
+    backoff adds to the edge delay, a duplicate re-arms a second
+    arrival slot one epoch later (the same payload twice; colliding
+    with the *next* epoch's send to that slot is last-write-wins), and
+    corrupted edges get their payload garbled **after** the checksum
+    plane is stamped, so ``sparse_deliver`` quarantines them. The
+    self-loop edge (an agent's own piece, a local queue) is exempt
+    from every fault. Quantized lines checksum + corrupt the int8
+    wire payload; scales ride clean (the checksum covers them).
     """
     n, k, planes = flight.T.shape
     scales = None
@@ -301,6 +348,56 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     if alive is not None:
         a = jnp.asarray(alive, bool)
         gate = gate & a[src] & a[:, None]            # src AND dst alive
+
+    if flight.chk is not None and faults is None:
+        raise ValueError(
+            "transport delay line (checksum planes allocated): "
+            "sparse_send needs this epoch's TransportFaults slice")
+    if faults is not None:
+        if flight.chk is None:
+            raise ValueError(
+                "sparse_send got TransportFaults but the delay line "
+                "has no checksum planes — build it with "
+                "make_sparse_inflight(..., transport=True)")
+        from repro.core import transport as _tp
+        self_edge = src == jnp.arange(n)[:, None]            # (n, k)
+        live = gate & (self_edge | ~faults.drop)
+        delay = topo.delay + jnp.where(self_edge, 0, faults.extra)
+        slot = jnp.where(live, (epoch + delay) % D1, D1)
+        hot = (jnp.arange(planes)[None, None, :]
+               == slot[:, :, None])                  # (n, k, D+2)
+        dup_gate = live & faults.dup & ~self_edge
+        slot2 = jnp.where(dup_gate, (epoch + delay + 1) % D1, D1)
+        hot2 = (jnp.arange(planes)[None, None, :]
+                == slot2[:, :, None])
+        hot_w = hot | hot2          # same payload at both arrivals
+        g_pieces = tree_map(lambda b, x: x[src].astype(b.dtype),
+                            flight.grads, pieces)    # (n, k, ...)
+        g_scales = (None if scales is None else
+                    tree_map(lambda b, x: x[src].astype(b.dtype),
+                             flight.scale, scales))
+        chk_val = _tp.plane_checksum(g_pieces, g_scales)     # (n, k)
+        g_pieces = _tp.corrupt_planes(g_pieces,
+                                      faults.corrupt & ~self_edge)
+
+        def put_g(buf, upd):
+            mask = jnp.reshape(hot_w,
+                               hot_w.shape + (1,) * (buf.ndim - 3))
+            return jnp.where(mask, upd[:, :, None], buf)
+
+        e32 = jnp.asarray(epoch, jnp.int32)
+        return SparseInFlight(
+            grads=tree_map(put_g, flight.grads, g_pieces),
+            T=jnp.where(hot_w, T[src][:, :, None], flight.T),
+            R=jnp.where(hot_w, topo.relevance[:, :, None], flight.R),
+            valid=jnp.where(hot_w, True, flight.valid),
+            scale=(None if g_scales is None else
+                   tree_map(put_g, flight.scale, g_scales)),
+            chk=jnp.where(hot_w, chk_val[:, :, None], flight.chk),
+            born=(None if flight.born is None else
+                  jnp.where(hot_w, e32, flight.born)),
+        )
+
     uniform_delay = False
     concrete = not (isinstance(topo.delay, jax.core.Tracer)
                     or isinstance(topo.mask, jax.core.Tracer))
@@ -337,6 +434,9 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
                 scale=None if scales is None else tree_map(
                     lambda b, x: wr(b, x[src][:, :, None]),
                     flight.scale, scales),
+                born=None if flight.born is None else wr(
+                    flight.born, jnp.broadcast_to(
+                        jnp.asarray(epoch, jnp.int32), (n, k, 1))),
             )
 
         # padded edges: gate per-edge with a plane read-select
@@ -357,6 +457,9 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
             scale=None if scales is None else tree_map(
                 lambda b, x: wr(b, x[src][:, :, None]),
                 flight.scale, scales),
+            born=None if flight.born is None else wr(
+                flight.born, jnp.broadcast_to(
+                    jnp.asarray(epoch, jnp.int32), (n, k, 1))),
         )
 
     # heterogeneous delays: fold the enable gate AND the topology mask
@@ -381,8 +484,12 @@ def sparse_send(flight: SparseInFlight, topo: Topology, pieces, T,
     new_scale = (None if scales is None else
                  tree_map(lambda b, x: put(b, x), flight.scale,
                           scales))
+    new_born = (None if flight.born is None else
+                jnp.where(hot, jnp.asarray(epoch, jnp.int32),
+                          flight.born))
     return SparseInFlight(grads=grads, T=new_T, R=new_R,
-                          valid=new_valid, scale=new_scale)
+                          valid=new_valid, scale=new_scale,
+                          born=new_born)
 
 
 def _regular_exchange(topo: "Topology | None", m: int, k: int) -> bool:
@@ -436,6 +543,17 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
     revived agent's restored ring forgets up to k slots per epoch
     while its first fresh planes ride the delay line. Irregular
     exchanges take the general compacting path as always.
+
+    On a transport delay line (checksum planes allocated) every
+    arrival is integrity-checked: the payload checksum is recomputed
+    over the popped slice and compared against the value stamped at
+    send. A mismatch — in-flight corruption — **quarantines** the
+    piece: its payload (and scales) are zeroed and it is delivered
+    invalid, so it carries exactly zero eq. 4 weight through every
+    combiner path. Checked deliveries can be partial per destination,
+    so the aligned k-block fast path is off (the general compacting
+    path runs); staleness-only lines (``born`` without ``chk``) keep
+    both paths, with the born epochs riding alongside T/R.
     """
     n, k, planes = flight.T.shape
     D1 = planes - 1                    # last plane = disabled scratch
@@ -446,11 +564,24 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
     Vm = flight.valid[:, :, slot]
     Sm = (None if flight.scale is None else
           tree_map(lambda b: b[:, :, slot], flight.scale))   # (n,k,nb)
+    Bm = (None if flight.born is None else flight.born[:, :, slot])
     if alive is not None:
         Vm = Vm & jnp.asarray(alive, bool)[:, None]
+    if flight.chk is not None:
+        from repro.core import transport as _tp
+        recomp = _tp.plane_checksum(pieces, Sm)              # (n, k)
+        ok = _tp.checksum_ok(flight.chk[:, :, slot], recomp)
+        Vm = Vm & ok
+
+        def scrub(x):   # quarantine: zero the corrupted payload too
+            o = jnp.reshape(ok, ok.shape + (1,) * (x.ndim - 2))
+            return jnp.where(o, x, jnp.zeros((), x.dtype))
+
+        pieces = tree_map(scrub, pieces)
+        Sm = None if Sm is None else tree_map(scrub, Sm)
     m = stores.T.shape[1]
 
-    if _regular_exchange(topo, m, k):
+    if _regular_exchange(topo, m, k) and flight.chk is None:
         # all-or-nothing delivery: Vm is uniformly True (sharing) or
         # False (warm-up); ptr stays k-aligned so the block never
         # wraps. Elastic runs write partial blocks (holes at dead
@@ -471,6 +602,7 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
             ptr=stores.ptr + k * delivered.astype(jnp.int32),
             scale=(None if Sm is None else
                    tree_map(wr, stores.scale, Sm)),
+            born=None if Bm is None else wr(stores.born, Bm),
         )
     else:
         def pop(dst_store, dst_idx):
@@ -478,7 +610,8 @@ def sparse_deliver(flight: SparseInFlight, stores: KnowledgeStore,
                 dst_store, tree_map(lambda x: x[dst_idx], pieces),
                 Tm[dst_idx], Rm[dst_idx], Vm[dst_idx],
                 scales=(None if Sm is None else
-                        tree_map(lambda x: x[dst_idx], Sm)))
+                        tree_map(lambda x: x[dst_idx], Sm)),
+                borns=None if Bm is None else Bm[dst_idx])
         new_stores = jax.vmap(pop)(stores, jnp.arange(n))
 
     cleared = flight._replace(

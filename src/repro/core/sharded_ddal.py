@@ -248,6 +248,24 @@ def _combine_topo(know: Knowledge, topo: Topology):
         *_edge_sums(know, topo.nbr, topo.mask, topo.relevance))
 
 
+def drop_topology_edges(topo: Topology, keep) -> Topology:
+    """Cut edges whose message did not survive this share round
+    (``keep``: (n, k) bool from ``Transport.deliver_mask``): the mask
+    bit goes False and the edge relevance to exactly zero, so both
+    eq. 4 sums in ``_edge_sums`` exclude the edge entirely — the
+    streaming trainer's equivalent of the buffer trainer's hole slots
+    and corruption quarantine. ``deliver_mask`` always keeps the
+    self-loop, and ``_finish_combine``'s eps clamp covers even a
+    destination with *no* surviving edge, so a faulty round degrades
+    toward the local window, never toward NaN. An all-True ``keep``
+    is a numerical identity (``mask & True``, ``where(True, rel,
+    0)``) — but note the op is still traced, so zero-rate faulty
+    streaming programs are equal in value, not in jaxpr."""
+    k = jnp.asarray(keep, bool)
+    return topo._replace(mask=topo.mask & k,
+                         relevance=jnp.where(k, topo.relevance, 0.0))
+
+
 # ---------------------------------------------------------------------
 # elastic membership (alive-masked exchange)
 # ---------------------------------------------------------------------

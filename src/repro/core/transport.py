@@ -1,0 +1,292 @@
+"""Transport faults — a seeded, planned-up-front message-fault
+injector for the knowledge exchange (ISSUE 9).
+
+``repro.core.chaos`` injects *membership* faults (whole agents die);
+this module injects *message* faults: an individual knowledge piece
+travelling one edge of the gossip graph can be **lost**, **duplicated**,
+**corrupted** in flight, or arrive **late** (delay jitter). The design
+mirrors ``chaos_schedule``: the whole fault history is rolled up front
+with a dedicated ``numpy`` generator into plain ``(horizon, n, k)``
+arrays — tests, the CI fault lane and ``bench_fault_transport.py`` all
+replay identical fault histories from the same seed, and planning in
+numpy means a fault schedule can never perturb a trainer's jax PRNG
+stream.
+
+Per-edge semantics (edge = destination row i, neighbor slot j of the
+``Topology`` table; the **self-loop is exempt** — an agent's own piece
+rides a local queue, not the network):
+
+loss / retransmit
+    A lost message with retransmit budget ``b`` is retried with
+    exponential backoff (1, 2, 4, … epochs). Each retry is an
+    independent loss draw; the first success converts the drop into
+    *extra delay* (the cumulative backoff — the original payload
+    eventually delivered late), exhausting the budget leaves it
+    dropped. All resolved at plan time: the jitted path sees only the
+    final ``drop`` / ``extra`` arrays.
+jitter
+    Uniform extra delivery delay in ``[0, transport_jitter]`` epochs,
+    added on top of the delay model's per-edge delay.
+duplication
+    A delivered message is re-delivered one epoch later (the delay
+    line re-arms a second arrival slot). Idempotent for the streaming
+    trainer's window sums, so it is a buffer-trainer fault only.
+corruption
+    The payload planes are garbled in flight (finite garbage — sign/
+    offset flips, never NaN). The position-weighted checksum computed
+    at send rides the clean payload, so ``sparse_deliver`` detects the
+    damage and **quarantines** the piece: payload zeroed, ``valid``
+    cleared — exactly zero eq. 4 weight, in both the T and R terms.
+
+The fault-free configuration (every knob zero ⇒ the ``"none"``
+strategy) allocates no checksum/birth planes and traces every program
+bit-identically to the pre-transport exchange — the same structural
+contract ``elastic=False`` honors.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.exchange.registry import TRANSPORTS
+
+#: additive garbage for fp32 payload corruption — huge against any
+#: gradient scale, and finite (0·garbage = 0, never NaN)
+CORRUPT_BIAS = 1e6
+#: checksum verification tolerance: absolute + relative slack for the
+#: send-side vs deliver-side fp32 reduction (identical shapes, so in
+#: practice bitwise; int8 payload sums are exact in fp32)
+CHK_ABS_TOL = 1e-4
+CHK_REL_TOL = 1e-5
+#: period of the position-dependent checksum weights (1 + pos % 13) —
+#: position weighting is what makes the int8 NOT-flip detectable even
+#: on planes whose value multiset is symmetric under q → -1-q
+_CHK_PERIOD = 13
+
+
+class TransportPlan(NamedTuple):
+    """One planned fault history — plain numpy, shape (horizon, n, k).
+
+    ``drop``: lost after the retransmit budget (never delivered).
+    ``extra``: extra delivery delay (jitter + retransmit backoff).
+    ``dup``: a second copy arrives one epoch after the first.
+    ``corrupt``: payload garbled in flight (checksum will catch it).
+    """
+    drop: np.ndarray      # bool
+    extra: np.ndarray     # int32
+    dup: np.ndarray       # bool
+    corrupt: np.ndarray   # bool
+
+    @property
+    def horizon(self) -> int:
+        return self.drop.shape[0]
+
+
+def transport_schedule(seed: int, n: int, k: int, horizon: int, *,
+                       loss: float = 0.0, dup: float = 0.0,
+                       corrupt: float = 0.0, jitter: int = 0,
+                       retransmit: int = 0) -> TransportPlan:
+    """Plan a deterministic per-edge fault history (see module doc).
+
+    The plan replays cyclically: epoch ``e`` uses row ``e % horizon``.
+    Probabilities are per message per edge; ``jitter`` is the maximum
+    uniform extra delay; ``retransmit`` is the per-message retry
+    budget (backoff 1, 2, 4, … epochs, resolved here into either a
+    late delivery or a final drop).
+    """
+    for name, p in (("loss", loss), ("dup", dup), ("corrupt", corrupt)):
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(
+                f"transport {name} probability must be in [0, 1], "
+                f"got {p}")
+    if jitter < 0:
+        raise ValueError(f"transport jitter must be >= 0, got {jitter}")
+    if retransmit < 0:
+        raise ValueError(
+            f"retransmit budget must be >= 0, got {retransmit}")
+    if horizon < 1:
+        raise ValueError(f"transport horizon must be >= 1, got {horizon}")
+    rng = np.random.default_rng(seed)
+    shape = (horizon, n, k)
+    drop = rng.random(shape) < loss
+    dup_m = rng.random(shape) < dup
+    corrupt_m = rng.random(shape) < corrupt
+    extra = (rng.integers(0, jitter + 1, shape).astype(np.int32)
+             if jitter > 0 else np.zeros(shape, np.int32))
+    if retransmit > 0 and loss > 0:
+        backoff = 0
+        for attempt in range(1, retransmit + 1):
+            backoff += 1 << (attempt - 1)
+            saved = drop & (rng.random(shape) >= loss)
+            extra = np.where(saved, extra + backoff, extra)
+            drop &= ~saved
+    return TransportPlan(drop=drop, extra=extra, dup=dup_m,
+                         corrupt=corrupt_m)
+
+
+class TransportFaults(NamedTuple):
+    """One epoch's fault slice — jnp (n, k) arrays, consumed by
+    ``repro.core.knowledge.sparse_send``."""
+    drop: jnp.ndarray
+    extra: jnp.ndarray
+    dup: jnp.ndarray
+    corrupt: jnp.ndarray
+
+
+class Transport:
+    """Jit-side view of a :class:`TransportPlan`: the plan arrays as
+    jnp constants plus the knob-derived delay-line headroom (static
+    regardless of which faults the seed realised, so the compiled
+    program shape never depends on the draw)."""
+
+    def __init__(self, plan: TransportPlan, *, extra_delay: int):
+        self.plan = plan
+        self.drop = jnp.asarray(plan.drop)
+        self.extra = jnp.asarray(plan.extra)
+        self.dup = jnp.asarray(plan.dup)
+        self.corrupt = jnp.asarray(plan.corrupt)
+        self.horizon = plan.horizon
+        #: worst-case extra delivery planes the line must hold:
+        #: jitter + full retransmit backoff + the duplicate's +1
+        self.extra_delay = int(extra_delay)
+
+    def at(self, epoch) -> TransportFaults:
+        """The (n, k) fault slice in force at ``epoch`` (traced ok)."""
+        e = jnp.asarray(epoch, jnp.int32) % self.horizon
+        return TransportFaults(
+            drop=jnp.take(self.drop, e, axis=0),
+            extra=jnp.take(self.extra, e, axis=0),
+            dup=jnp.take(self.dup, e, axis=0),
+            corrupt=jnp.take(self.corrupt, e, axis=0))
+
+    def deliver_mask(self, step, nbr) -> jnp.ndarray:
+        """Streaming-trainer view: (n, k) bool, True where this share
+        round's message survives. Lost and corrupted messages are
+        equivalent there — a quarantined window contributes exactly
+        zero — while dup/jitter are no-ops on idempotent window sums
+        with no delay line. Self-loops always survive (local queue)."""
+        f = self.at(step)
+        n = nbr.shape[0]
+        self_edge = nbr == jnp.arange(n)[:, None]
+        return self_edge | ~(f.drop | f.corrupt)
+
+
+# ---------------------------------------------------------------------
+# wire integrity: position-weighted payload checksums
+# ---------------------------------------------------------------------
+def _leaf_checksum(leaf) -> jnp.ndarray:
+    """(n, k) fp32 checksum of one (n, k, *param) payload leaf:
+    Σ_p w_p·x_p with position weights w_p = 1 + (p % 13). Position
+    weighting keeps the int8 NOT-flip (q → -1-q) visible even when a
+    plane's value multiset is symmetric; int8 products stay ≤ 13·127,
+    so the fp32 sum is exact and order-independent."""
+    nk = leaf.shape[:2]
+    x = jnp.reshape(leaf, nk + (-1,)).astype(jnp.float32)
+    w = (jnp.arange(x.shape[-1]) % _CHK_PERIOD + 1).astype(jnp.float32)
+    return x @ w
+
+
+def plane_checksum(pieces, scales=None) -> jnp.ndarray:
+    """Per-edge payload checksum over a (n, k, ...)-shaped pytree
+    (plus its quantization ``scales``, when present). Called with the
+    *same* shapes at send (the gathered update) and at deliver (the
+    popped arrival slice), so both reductions are the same computation
+    — any residual fp32 slack is covered by ``checksum_ok``."""
+    parts = list(jax.tree.leaves(pieces))
+    if scales is not None:
+        parts += list(jax.tree.leaves(scales))
+    total = _leaf_checksum(parts[0])
+    for leaf in parts[1:]:
+        total = total + _leaf_checksum(leaf)
+    return total
+
+
+def checksum_ok(carried, recomputed) -> jnp.ndarray:
+    """Elementwise integrity verdict (True = intact)."""
+    return (jnp.abs(recomputed - carried)
+            <= CHK_ABS_TOL + CHK_REL_TOL * jnp.abs(carried))
+
+
+def corrupt_planes(pieces, mask):
+    """Garble the payload wherever ``mask`` ((n, k) bool) is set:
+    fp32 leaves take a huge finite offset flip (``CORRUPT_BIAS - x``),
+    int8 leaves a bitwise NOT (``-1 - x``, always in range). Both are
+    finite — a quarantine miss could bias the average but can never
+    manufacture a NaN."""
+    def garble(x):
+        m = jnp.reshape(mask, mask.shape + (1,) * (x.ndim - 2))
+        if x.dtype == jnp.int8:
+            return jnp.where(m, (-1 - x).astype(jnp.int8), x)
+        return jnp.where(m, (CORRUPT_BIAS - x).astype(x.dtype), x)
+    return jax.tree.map(garble, pieces)
+
+
+# ---------------------------------------------------------------------
+# registry strategies + spec resolution
+# ---------------------------------------------------------------------
+def _any_fault_knob(spec) -> bool:
+    return (getattr(spec, "transport_loss", 0.0) > 0
+            or getattr(spec, "transport_dup", 0.0) > 0
+            or getattr(spec, "transport_corrupt", 0.0) > 0
+            or getattr(spec, "transport_jitter", 0) > 0)
+
+
+def transport_key(spec) -> str:
+    """Resolve the spec's transport strategy key (``"auto"`` derives
+    it from the fault knobs — any nonzero rate means ``"faulty"``)."""
+    key = getattr(spec, "exchange_transport", "auto")
+    if key != "auto":
+        return key
+    return "faulty" if _any_fault_knob(spec) else "none"
+
+
+def transport_enabled(spec) -> bool:
+    """True when the spec's exchange runs over the faulty transport."""
+    return transport_key(spec) == "faulty"
+
+
+@TRANSPORTS.register("none")
+def _make_none_transport(*, spec, shape) -> None:
+    """Perfect delivery — the structural fixed point: ``None`` means
+    no checksum/birth planes, no fault ops, the pre-transport program
+    bit for bit."""
+    del spec, shape
+    return None
+
+
+@TRANSPORTS.register(
+    "faulty",
+    params={"loss": ("transport_loss", float),
+            "dup": ("transport_dup", float),
+            "corrupt": ("transport_corrupt", float),
+            "jitter": ("transport_jitter", int),
+            "retransmit": ("transport_retransmit", int),
+            "transport_seed": ("transport_seed", int),
+            "transport_horizon": ("transport_horizon", int),
+            "max_staleness": ("max_staleness", int),
+            "staleness_decay": ("transport_decay", float)})
+def _make_faulty_transport(*, spec, shape) -> Transport:
+    """The seeded planned injector over the ``transport_*`` knobs;
+    ``shape`` is the base topology's (n, k) edge table shape."""
+    n, k = shape
+    jitter = int(getattr(spec, "transport_jitter", 0))
+    retransmit = int(getattr(spec, "transport_retransmit", 0))
+    dup = float(getattr(spec, "transport_dup", 0.0))
+    plan = transport_schedule(
+        int(getattr(spec, "transport_seed", 0)), n, k,
+        int(getattr(spec, "transport_horizon", 256)),
+        loss=float(getattr(spec, "transport_loss", 0.0)),
+        dup=dup,
+        corrupt=float(getattr(spec, "transport_corrupt", 0.0)),
+        jitter=jitter, retransmit=retransmit)
+    extra = jitter + ((1 << retransmit) - 1) + (1 if dup > 0 else 0)
+    return Transport(plan, extra_delay=extra)
+
+
+def make_transport(spec, shape) -> "Transport | None":
+    """Build the spec's transport model for an (n, k) edge table —
+    ``None`` for perfect delivery (the ``"none"`` strategy)."""
+    return TRANSPORTS.get(transport_key(spec))(spec=spec, shape=shape)

@@ -100,9 +100,12 @@ def main(argv=None):
                         "relevance_ema= explore_eps= pods=). "
                         "Repeatable; keys and types come from the "
                         "strategy registry, so newly registered "
-                        "strategies need no new flags. Example: "
+                        "strategies need no new flags. Examples: "
                         "--exchange schedule=relevance_topk "
-                        "--exchange explore_eps=0.2")
+                        "--exchange explore_eps=0.2; faulty-network "
+                        "training: --exchange transport=faulty "
+                        "--exchange loss=0.2 --exchange corrupt=0.05 "
+                        "(repro.core.transport)")
     p.add_argument("--topology", default=None,
                    choices=["full", "ring", "torus2d", "star",
                             "random_k", "hierarchical"],

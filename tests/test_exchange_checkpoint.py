@@ -174,7 +174,7 @@ def test_restore_non_strict_fills_missing_leaves(tmp_path):
     path = os.path.join(tmp_path, "old.npz")
     save(path, saved)
     template = {"w": jnp.zeros((4,)), "alive": jnp.ones((4,), bool)}
-    with pytest.raises(KeyError, match="alive"):
+    with pytest.raises(ValueError, match="missing leaf.*alive"):
         restore(path, template)
     got = restore(path, template, strict=False)
     np.testing.assert_array_equal(np.asarray(got["w"]),
@@ -200,6 +200,71 @@ def test_bf16_leaves_roundtrip_bitwise(tmp_path):
     assert back["planes"].dtype == jnp.bfloat16
     assert back["alive"].dtype == bool
     _assert_trees_equal(back, tree)
+
+
+# ----------------------------------------------------------------------
+# damaged checkpoints fail up front with one descriptive ValueError
+# ----------------------------------------------------------------------
+def test_restore_truncated_file_raises_valueerror(tmp_path):
+    """A checkpoint cut off mid-write (preemption during save) is
+    detected before any leaf is touched: ValueError naming the file,
+    not a zipfile.BadZipFile / KeyError from inside np.load."""
+    tree = {"w": jnp.arange(64.0), "b": jnp.ones((8, 8))}
+    path = os.path.join(tmp_path, "full.npz")
+    save(path, tree)
+    with open(path, "rb") as f:
+        blob = f.read()
+    cut = os.path.join(tmp_path, "cut.npz")
+    with open(cut, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(ValueError, match="unreadable|truncated"):
+        restore(cut, jax.eval_shape(lambda: tree))
+    garbage = os.path.join(tmp_path, "garbage.npz")
+    with open(garbage, "wb") as f:
+        f.write(b"not an npz archive at all")
+    with pytest.raises(ValueError, match="unreadable|truncated"):
+        restore(garbage, jax.eval_shape(lambda: tree))
+
+
+def test_restore_shape_mismatch_names_leaf_and_shapes(tmp_path):
+    """Restoring into a template with a different group size names
+    the offending leaf path and both shapes — and reports *every*
+    mismatch at once, not just the first."""
+    saved = {"stores": {"T": jnp.zeros((4, 8)), "R": jnp.zeros((4, 8))},
+             "epoch": jnp.zeros((), jnp.int32)}
+    path = os.path.join(tmp_path, "n4.npz")
+    save(path, saved)
+    template = jax.eval_shape(lambda: {
+        "stores": {"T": jnp.zeros((6, 8)), "R": jnp.zeros((6, 8))},
+        "epoch": jnp.zeros((), jnp.int32)})
+    with pytest.raises(ValueError) as ei:
+        restore(path, template)
+    msg = str(ei.value)
+    assert "shape mismatch" in msg
+    assert "'T'" in msg and "'R'" in msg
+    assert "(4, 8)" in msg and "(6, 8)" in msg
+
+
+def test_restore_transport_groupstate_roundtrip(tmp_path):
+    """A transport-enabled GroupState (checksum + born planes in the
+    delay line, born column in the stores) checkpoints and continues
+    bitwise — the fault plan is host-side config, so a restored run
+    replays the same fault history from the same epoch."""
+    n = 3
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+                     transport_loss=0.3, transport_corrupt=0.1,
+                     transport_seed=7, max_staleness=5, max_delay=1)
+    ddal = _toy_ddal(spec)
+    gs = _run(ddal, ddal.init(_toy_states(n)), 6)
+    assert gs.flight.chk is not None and gs.stores.born is not None
+
+    path = os.path.join(tmp_path, "transport.npz")
+    save(path, gs, step=6)
+    back = restore(path, jax.eval_shape(lambda: gs))
+    _assert_trees_equal(back, gs)
+    cont = _run(ddal, back, 5, start=6)
+    straight = _run(ddal, gs, 5, start=6)
+    _assert_trees_equal(cont, straight)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,553 @@
+"""Transport faults (ISSUE 9): seeded message-fault injection on the
+exchange path, integrity-checked delivery, staleness-aware degradation.
+
+Pins the contract in layers:
+
+* the **plan** (``transport_schedule``) — determinism, realised rates,
+  retransmit's loss^(b+1) survival math, knob validation;
+* the **wire** (``plane_checksum`` / ``corrupt_planes``) — corruption
+  is always detected, incl. the int8 NOT-flip on value-symmetric
+  planes, and always finite;
+* the **delay line** (``sparse_send`` / ``sparse_deliver``) — jitter
+  postpones arrival, duplication re-arms a second slot, corruption
+  quarantines (exactly zero eq. 4 weight);
+* the **trainers** — the fault-free config is *structurally identical*
+  (same jaxpr, same pytree) and bitwise-equal in both trainers; total
+  loss + staleness cutoff degrades cleanly to purely-local learning,
+  never NaN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import optim
+from repro.configs.base import GroupSpec
+from repro.core import DDAL
+from repro.core import knowledge as K
+from repro.core import topology as tp
+from repro.core.exchange import build_exchange
+from repro.core.sharded_ddal import (TrainState, init_knowledge,
+                                     make_group_train_step)
+from repro.core.transport import (CORRUPT_BIAS, TransportFaults,
+                                  checksum_ok, corrupt_planes,
+                                  plane_checksum, transport_schedule)
+
+
+# ---------------------------------------------------------------------
+# toy fixtures (same quadratic family as the checkpoint/chaos tests)
+# ---------------------------------------------------------------------
+def _toy_ddal(spec, delay=None):
+    def gen(state, key):
+        del key
+        return {"w": state["w"] - state["t"]}, {"w": state["w"]}, state
+
+    def app(state, g):
+        return {"w": state["w"] - 0.5 * g["w"], "t": state["t"]}
+
+    return DDAL(spec, gen, app, lambda s: {"w": s["w"]}, delay=delay)
+
+
+def _toy_states(n):
+    return {"w": jnp.zeros((n,)),
+            "t": jnp.arange(n, dtype=jnp.float32)}
+
+
+def _run(ddal, gs, epochs, start=0):
+    step = jax.jit(ddal.epoch_step)
+    for e in range(start, start + epochs):
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e),
+                                          ddal.spec.n_agents))
+    return gs
+
+
+def _buffer_final_w(spec, epochs=8, delay=None):
+    ddal = _toy_ddal(spec, delay=delay)
+    gs = _run(ddal, ddal.init(_toy_states(spec.n_agents)), epochs)
+    return np.asarray(gs.agent_states["w"])
+
+
+def _streaming_run(spec, steps=6):
+    opt = optim.sgd(0.1)
+
+    def loss_fn(params, batch):
+        return jnp.mean((params["w"] - batch["x"]) ** 2)
+
+    exchange = build_exchange(spec, kind="streaming")
+    step = jax.jit(make_group_train_step(None, spec, opt,
+                                         loss_fn=loss_fn,
+                                         exchange=exchange))
+    rng = np.random.default_rng(0)
+    n = spec.n_agents
+    params = {"w": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+    state = TrainState(
+        params=params, opt_state=jax.vmap(opt.init)(params),
+        know=init_knowledge(params, rel=exchange.streaming_rel_init(),
+                            sketch_dim=exchange.sketch_dim),
+        step=jnp.zeros((), jnp.int32))
+    for i in range(steps):
+        batch = {"x": jnp.asarray(rng.normal(size=(n, 5)),
+                                  jnp.float32)}
+        state, m = step(state, batch)
+        assert bool(jnp.isfinite(m["loss"]).all())
+    return np.asarray(state.params["w"])
+
+
+# ---------------------------------------------------------------------
+# the plan: deterministic, right rates, retransmit math, validation
+# ---------------------------------------------------------------------
+def test_plan_is_deterministic_in_seed():
+    a = transport_schedule(3, 4, 4, 64, loss=0.3, dup=0.2,
+                           corrupt=0.1, jitter=2, retransmit=1)
+    b = transport_schedule(3, 4, 4, 64, loss=0.3, dup=0.2,
+                           corrupt=0.1, jitter=2, retransmit=1)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = transport_schedule(4, 4, 4, 64, loss=0.3, dup=0.2,
+                           corrupt=0.1, jitter=2, retransmit=1)
+    assert any((np.asarray(x) != np.asarray(y)).any()
+               for x, y in zip(a, c))
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(0.05, 0.95, allow_nan=False))
+@settings(max_examples=15, deadline=None)
+def test_plan_realises_requested_rates(seed, loss):
+    plan = transport_schedule(seed, 8, 8, 400, loss=loss, dup=loss,
+                              corrupt=loss)
+    for field in ("drop", "dup", "corrupt"):
+        rate = float(np.mean(getattr(plan, field)))
+        assert abs(rate - loss) < 0.02, (field, rate, loss)
+    assert (plan.extra == 0).all()          # no jitter, no retransmit
+
+
+def test_retransmit_converts_drops_into_backoff_delay():
+    """With budget b, a message survives unless all 1 + b draws lose:
+    realised drop rate ≈ loss^(b+1); every save carries the cumulative
+    backoff (1, 3, 7, … epochs) as extra delay, bounded by 2^b - 1."""
+    loss = 0.5
+    base = transport_schedule(0, 8, 8, 600, loss=loss)
+    for b in (1, 2, 3):
+        plan = transport_schedule(0, 8, 8, 600, loss=loss,
+                                  retransmit=b)
+        rate = float(np.mean(plan.drop))
+        assert abs(rate - loss ** (b + 1)) < 0.03, (b, rate)
+        assert float(np.mean(base.drop)) > rate
+        saved = ~plan.drop & (plan.extra > 0)
+        assert saved.any()
+        assert int(plan.extra.max()) <= (1 << b) - 1
+        assert (plan.extra[plan.drop] == 0).all()
+
+
+def test_jitter_bounds_extra_delay():
+    plan = transport_schedule(1, 4, 4, 200, jitter=3)
+    assert int(plan.extra.min()) >= 0
+    assert int(plan.extra.max()) <= 3
+    assert len(np.unique(plan.extra)) == 4   # uniform over 0..3
+    assert not plan.drop.any() and not plan.corrupt.any()
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(loss=1.5), r"loss probability must be in \[0, 1\]"),
+    (dict(dup=-0.1), r"dup probability must be in \[0, 1\]"),
+    (dict(corrupt=2.0), r"corrupt probability must be in \[0, 1\]"),
+    (dict(jitter=-1), "jitter must be >= 0"),
+    (dict(retransmit=-2), "retransmit budget must be >= 0"),
+])
+def test_schedule_validates_knobs(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        transport_schedule(0, 4, 4, 16, **kw)
+
+
+def test_schedule_validates_horizon():
+    with pytest.raises(ValueError, match="horizon must be >= 1"):
+        transport_schedule(0, 4, 4, 0)
+
+
+# ---------------------------------------------------------------------
+# GroupSpec knob validation (satellite: construction-time, named ranges)
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("kw,msg", [
+    (dict(transport_loss=1.5), r"in \[0, 1\]"),
+    (dict(transport_dup=-0.2), r"in \[0, 1\]"),
+    (dict(transport_corrupt=7.0), r"in \[0, 1\]"),
+    (dict(transport_jitter=-1), "transport_jitter must be >= 0"),
+    (dict(transport_retransmit=9), r"transport_retransmit must be in"),
+    (dict(transport_horizon=0), "transport_horizon must be >= 1"),
+    (dict(transport_decay=0.0), r"transport_decay must be in \(0, 1\]"),
+    (dict(transport_decay=1.1), r"transport_decay must be in \(0, 1\]"),
+    (dict(max_staleness=0), "max_staleness must be >= 1"),
+    (dict(exchange_transport="bogus"), "unknown transport"),
+    (dict(exchange_transport="none", transport_loss=0.2),
+     "silently ignore"),
+])
+def test_groupspec_validates_transport_knobs(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        GroupSpec(n_agents=4, threshold=1, minibatch=2, **kw)
+
+
+def test_exchange_cli_speaks_transport():
+    from repro.launch.train import _exchange_kv
+    assert _exchange_kv("transport=faulty") == ("exchange_transport",
+                                                "faulty")
+    assert _exchange_kv("loss=0.2") == ("transport_loss", 0.2)
+    assert _exchange_kv("max_staleness=4") == ("max_staleness", 4)
+
+
+# ---------------------------------------------------------------------
+# the wire: checksums catch corruption; corruption is always finite
+# ---------------------------------------------------------------------
+def test_checksum_catches_f32_corruption_per_edge():
+    rng = np.random.default_rng(0)
+    pieces = {"w": jnp.asarray(rng.normal(size=(3, 2, 5)),
+                               jnp.float32)}
+    chk = plane_checksum(pieces)
+    mask = jnp.asarray([[True, False], [False, True], [False, False]])
+    garbled = corrupt_planes(pieces, mask)
+    ok = checksum_ok(chk, plane_checksum(garbled))
+    np.testing.assert_array_equal(np.asarray(ok), ~np.asarray(mask))
+    assert np.isfinite(np.asarray(garbled["w"])).all()
+
+
+def test_checksum_catches_int8_not_flip_on_symmetric_plane():
+    """The value multiset {3, -4} is invariant under q -> -1 - q; a
+    plain sum checksum would miss the flip. Position weighting doesn't."""
+    plane = {"q": jnp.asarray([[[3, -4]]], jnp.int8)}
+    chk = plane_checksum(plane)
+    flipped = corrupt_planes(plane, jnp.asarray([[True]]))
+    np.testing.assert_array_equal(
+        np.asarray(flipped["q"]), np.asarray([[[-4, 3]]], np.int8))
+    assert not bool(checksum_ok(chk, plane_checksum(flipped))[0, 0])
+    intact = corrupt_planes(plane, jnp.asarray([[False]]))
+    assert bool(checksum_ok(chk, plane_checksum(intact))[0, 0])
+
+
+def test_corrupt_planes_finite_and_in_range():
+    pieces = {"f": jnp.ones((2, 2, 3), jnp.float32) * 7.0,
+              "q": jnp.full((2, 2, 3), 127, jnp.int8)}
+    out = corrupt_planes(pieces, jnp.ones((2, 2), bool))
+    assert np.isfinite(np.asarray(out["f"])).all()
+    assert float(np.max(np.abs(np.asarray(out["f"])))) <= CORRUPT_BIAS
+    assert np.asarray(out["q"]).dtype == np.int8
+    np.testing.assert_array_equal(np.asarray(out["q"]), -128)
+
+
+# ---------------------------------------------------------------------
+# the delay line: jitter postpones, duplication re-arms, corruption
+# quarantines — pinned on the raw primitives
+# ---------------------------------------------------------------------
+def _line_rig(n=2, max_delay=3):
+    topo = tp.full(n)
+    params0 = {"w": jnp.zeros((3,))}
+    flight = K.make_sparse_inflight(params0, topo, max_delay,
+                                    transport=True, track_born=True)
+    stores = jax.vmap(lambda _: K.make_store(params0, 8,
+                                             track_born=True))(
+        jnp.arange(n))
+    pieces = {"w": jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)}
+    T = jnp.ones((n,))
+    return topo, flight, stores, pieces, T
+
+
+def _faults(n, k, *, drop=False, extra=0, dup=False, corrupt=False):
+    return TransportFaults(
+        drop=jnp.full((n, k), drop),
+        extra=jnp.full((n, k), extra, jnp.int32),
+        dup=jnp.full((n, k), dup),
+        corrupt=jnp.full((n, k), corrupt))
+
+
+def _valid_count(stores):
+    return np.asarray(stores.valid).sum(axis=1)
+
+
+def test_jitter_postpones_foreign_arrivals():
+    topo, flight, stores, pieces, T = _line_rig()
+    n, k = topo.nbr.shape
+    flight = K.sparse_send(flight, topo, pieces, T, 0, True,
+                           faults=_faults(n, k, extra=2))
+    flight, stores = K.sparse_deliver(flight, stores, 0)
+    np.testing.assert_array_equal(_valid_count(stores), 1)  # self only
+    flight, stores = K.sparse_deliver(flight, stores, 1)
+    np.testing.assert_array_equal(_valid_count(stores), 1)  # in flight
+    flight, stores = K.sparse_deliver(flight, stores, 2)
+    np.testing.assert_array_equal(_valid_count(stores), 2)  # arrived
+
+
+def test_duplication_rearms_a_second_arrival():
+    topo, flight, stores, pieces, T = _line_rig()
+    n, k = topo.nbr.shape
+    flight = K.sparse_send(flight, topo, pieces, T, 0, True,
+                           faults=_faults(n, k, dup=True))
+    flight, stores = K.sparse_deliver(flight, stores, 0)
+    np.testing.assert_array_equal(_valid_count(stores), 2)
+    flight, stores = K.sparse_deliver(flight, stores, 1)
+    # the foreign piece arrives again one epoch later, same payload
+    np.testing.assert_array_equal(_valid_count(stores), 3)
+    g = np.asarray(stores.grads["w"])
+    v = np.asarray(stores.valid)
+    for i in range(n):
+        rows = g[i][v[i]]
+        assert len(np.unique(rows.round(6), axis=0)) == 2  # self + dup'd
+
+
+def test_drop_loses_foreign_pieces():
+    topo, flight, stores, pieces, T = _line_rig()
+    n, k = topo.nbr.shape
+    flight = K.sparse_send(flight, topo, pieces, T, 0, True,
+                           faults=_faults(n, k, drop=True))
+    for e in range(4):
+        flight, stores = K.sparse_deliver(flight, stores, e)
+    np.testing.assert_array_equal(_valid_count(stores), 1)  # self only
+
+
+def test_corruption_is_quarantined_with_zero_weight():
+    """A corrupted piece fails its checksum at deliver: it is never
+    appended as valid, and no CORRUPT_BIAS garbage reaches the stores
+    — exactly zero eq. 4 weight, in both the T and R terms."""
+    topo, flight, stores, pieces, T = _line_rig()
+    n, k = topo.nbr.shape
+    flight = K.sparse_send(flight, topo, pieces, T, 0, True,
+                           faults=_faults(n, k, corrupt=True))
+    flight, stores = K.sparse_deliver(flight, stores, 0)
+    np.testing.assert_array_equal(_valid_count(stores), 1)  # self only
+    g = np.asarray(stores.grads["w"])
+    v = np.asarray(stores.valid)
+    assert (np.abs(g[v]) < CORRUPT_BIAS / 2).all()
+    Tcol = np.asarray(stores.T)
+    from repro.core.weighting import eq4_weights
+    w = np.asarray(jax.vmap(
+        lambda T, R, vv: eq4_weights(T, R, valid=vv))(
+            stores.T, stores.R, stores.valid))
+    assert (w[~v] == 0.0).all()
+    assert np.isfinite(w).all() and np.isfinite(Tcol).all()
+
+
+def test_self_loop_is_exempt_from_all_faults():
+    topo, flight, stores, pieces, T = _line_rig()
+    n, k = topo.nbr.shape
+    flight = K.sparse_send(
+        flight, topo, pieces, T, 0, True,
+        faults=_faults(n, k, drop=True, corrupt=True, extra=3))
+    flight, stores = K.sparse_deliver(flight, stores, 0)
+    # own piece arrives on time, intact, despite every fault being set
+    cnt = _valid_count(stores)
+    np.testing.assert_array_equal(cnt, 1)
+    g = np.asarray(stores.grads["w"])
+    v = np.asarray(stores.valid)
+    for i in range(n):
+        np.testing.assert_allclose(g[i][v[i]][0],
+                                   np.asarray(pieces["w"])[i])
+
+
+# ---------------------------------------------------------------------
+# trainers: fault-free structural identity + bitwise equality
+# ---------------------------------------------------------------------
+def test_fault_free_buffer_is_structurally_identical():
+    """Default spec vs explicit transport='none': same pytree
+    structure, same jaxpr — the elastic=False contract, honored by
+    transport too."""
+    n = 4
+    base = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=6)
+    none = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+                     exchange_transport="none")
+    da, dn = _toy_ddal(base), _toy_ddal(none)
+    ga, gn = da.init(_toy_states(n)), dn.init(_toy_states(n))
+    assert (jax.tree_util.tree_structure(ga)
+            == jax.tree_util.tree_structure(gn))
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    ja = jax.make_jaxpr(da.epoch_step)(ga, keys)
+    jn = jax.make_jaxpr(dn.epoch_step)(gn, keys)
+    assert str(ja) == str(jn)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_zero_rate_faulty_buffer_is_bitwise_default(seed):
+    """Forcing the 'faulty' strategy with every rate zero allocates
+    the checksum planes but changes no delivered value: final params
+    are bitwise the default run's, whatever the plan seed."""
+    n = 4
+    kw = dict(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+              topology="ring")
+    ref = _buffer_final_w(GroupSpec(**kw))
+    out = _buffer_final_w(GroupSpec(**kw, exchange_transport="faulty",
+                                    transport_seed=seed))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_zero_rate_faulty_streaming_is_bitwise_default():
+    kw = dict(n_agents=4, threshold=1, minibatch=2,
+              knowledge_mode="streaming", topology="ring")
+    ref = _streaming_run(GroupSpec(**kw))
+    out = _streaming_run(GroupSpec(**kw, exchange_transport="faulty"))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_corrupt_everything_equals_lose_everything():
+    """Quarantine (corrupt=1) and loss (loss=1) must leave bitwise
+    identical agent params: a quarantined piece is a hole, exactly."""
+    kw = dict(n_agents=3, threshold=1, minibatch=2, m_pieces=6)
+    lost = _buffer_final_w(GroupSpec(**kw, transport_loss=1.0))
+    quar = _buffer_final_w(GroupSpec(**kw, transport_corrupt=1.0))
+    np.testing.assert_array_equal(lost, quar)
+
+
+# ---------------------------------------------------------------------
+# graceful degradation: staleness cutoff, local fallback, no NaN
+# ---------------------------------------------------------------------
+def test_total_loss_plus_staleness_degrades_to_local_learning():
+    """loss=1 with a uniform 2-epoch delay and max_staleness=1 cuts
+    every piece (even the agent's own arrives too old): eq. 4 goes
+    empty, the trainer falls back to the purely-local update, and
+    every agent still converges to its own target — no NaN, no stall."""
+    n = 3
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+                     transport_loss=1.0, max_staleness=1, max_delay=2)
+    delay = jnp.full((n, n), 2, jnp.int32)
+    w = _buffer_final_w(spec, epochs=16, delay=delay)
+    t = np.arange(n, dtype=np.float32)
+    assert np.isfinite(w).all()
+    assert (np.abs(w - t) < 0.1).all(), w
+
+
+def test_staleness_decay_discounts_late_pieces():
+    n = 4
+    kw = dict(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+              transport_loss=0.3, transport_seed=5, max_delay=1)
+    delay = jnp.ones((n, n), jnp.int32)
+    full = _buffer_final_w(GroupSpec(**kw), epochs=10, delay=delay)
+    disc = _buffer_final_w(GroupSpec(**kw, transport_decay=0.5),
+                           epochs=10, delay=delay)
+    assert np.isfinite(full).all() and np.isfinite(disc).all()
+    assert (full != disc).any()     # the discount is live
+
+
+def test_mixed_faults_buffer_stays_finite_and_learns():
+    n = 4
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=8,
+                     transport_loss=0.2, transport_corrupt=0.1,
+                     transport_dup=0.1, transport_jitter=1,
+                     transport_retransmit=2, max_staleness=6,
+                     transport_decay=0.9, max_delay=1,
+                     transport_seed=11)
+    w = _buffer_final_w(spec, epochs=14)
+    t = np.arange(n, dtype=np.float32)
+    assert np.isfinite(w).all()
+    # group averaging pulls toward the group mean; faults only slow it
+    assert (np.abs(w - t.mean()) < np.abs(np.zeros(n) - t.mean())
+            + 0.5).all()
+
+
+def test_lossy_streaming_stays_finite():
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     knowledge_mode="streaming", topology="ring",
+                     transport_loss=0.5, transport_corrupt=0.2,
+                     transport_seed=3)
+    w = _streaming_run(spec, steps=8)
+    assert np.isfinite(w).all()
+
+
+# ---------------------------------------------------------------------
+# build-time composition rules
+# ---------------------------------------------------------------------
+def test_delay_line_headroom_is_knob_derived():
+    """jitter + full retransmit backoff + the duplicate's +1 — static
+    whatever the seed realises, so program shape never depends on it."""
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     max_delay=1, transport_loss=0.1,
+                     transport_jitter=2, transport_retransmit=2,
+                     transport_dup=0.1)
+    ex = build_exchange(spec, kind="buffer")
+    assert ex.max_delay == 1 + 2 + 3 + 1
+    base = build_exchange(GroupSpec(n_agents=4, threshold=1,
+                                    minibatch=2, max_delay=1),
+                          kind="buffer")
+    assert base.max_delay == 1
+
+
+def test_streaming_rejects_delay_line_knobs():
+    with pytest.raises(ValueError, match="max_staleness"):
+        build_exchange(GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                                 knowledge_mode="streaming",
+                                 max_staleness=3), kind="streaming")
+    with pytest.raises(ValueError, match="jitter"):
+        build_exchange(GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                                 knowledge_mode="streaming",
+                                 transport_loss=0.1,
+                                 transport_jitter=1),
+                       kind="streaming")
+
+
+def test_pod_combiner_rejects_transport():
+    spec = GroupSpec(n_agents=4, threshold=1, minibatch=2,
+                     knowledge_mode="streaming",
+                     topology="hierarchical", degree=2, pods=2,
+                     exchange_combiner="pod", transport_loss=0.1)
+    with pytest.raises(ValueError, match="pod"):
+        build_exchange(spec, kind="streaming")
+
+
+def test_transport_composes_with_elastic_membership():
+    n = 4
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=8,
+                     elastic=True, transport_loss=0.2,
+                     transport_corrupt=0.1, transport_seed=2,
+                     max_staleness=6, max_delay=1)
+    ddal = _toy_ddal(spec)
+    gs = _run(ddal, ddal.init(_toy_states(n)), 4)
+    dead = jnp.asarray([True, False, False, False])
+    gs = ddal.kill(gs, dead)
+    gs = _run(ddal, gs, 4, start=4)
+    gs = ddal.revive(gs, dead)
+    gs = _run(ddal, gs, 4, start=8)
+    assert np.isfinite(np.asarray(gs.agent_states["w"])).all()
+
+
+def test_transport_composes_with_quantized_line():
+    n = 3
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2, m_pieces=6,
+                     knowledge_quant_block=128, transport_loss=0.2,
+                     transport_corrupt=0.2, transport_seed=9,
+                     max_delay=1)
+    w = _buffer_final_w(spec, epochs=10)
+    assert np.isfinite(w).all()
+
+
+# ---------------------------------------------------------------------
+# slow lane: long mixed-fault sweep with membership chaos on top
+# ---------------------------------------------------------------------
+@pytest.mark.slow
+def test_long_mixed_fault_sweep_with_chaos():
+    from repro.core.chaos import chaos_schedule, membership_events
+
+    n = 6
+    spec = GroupSpec(n_agents=n, threshold=1, minibatch=2,
+                     m_pieces=12, elastic=True, transport_loss=0.25,
+                     transport_corrupt=0.1, transport_dup=0.1,
+                     transport_jitter=2, transport_retransmit=2,
+                     max_staleness=8, transport_decay=0.95,
+                     max_delay=1, transport_seed=21)
+    ddal = _toy_ddal(spec)
+    gs = ddal.init(_toy_states(n))
+    step = jax.jit(ddal.epoch_step)
+    epochs = 40
+    alive = chaos_schedule(13, n, epochs, kill_prob=0.08,
+                           revive_after=4, min_alive=2)
+    events = {e: (k, r) for e, k, r in membership_events(alive)}
+    for e in range(epochs):
+        if e in events:
+            kill, revive = events[e]
+            if kill.any():
+                gs = ddal.kill(gs, jnp.asarray(kill))
+            if revive.any():
+                gs = ddal.revive(gs, jnp.asarray(revive))
+        gs, _ = step(gs, jax.random.split(jax.random.PRNGKey(e), n))
+        assert np.isfinite(np.asarray(gs.agent_states["w"])).all(), e
+    w = np.asarray(gs.agent_states["w"])
+    t = np.arange(n, dtype=np.float32)
+    assert (np.abs(w - t.mean()) < np.abs(t - t.mean()) + 0.5).all()
